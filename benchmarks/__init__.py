@@ -1,0 +1,2 @@
+"""Benchmark harnesses: one per paper table (II-IX) + privacy curves,
+kernel microbench, and the dry-run roofline report."""

@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python),
+so wall-times are NOT TPU performance; we report the XLA-path reference
+implementations' wall time (what the models actually execute here) plus
+derived bytes/FLOPs so the numbers are meaningful.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fedplt_update.ref import fedplt_update_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lru_scan.ref import lru_scan_ref
+
+
+def _bench(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(quick=True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    n = 1 << 20
+    w, g, v = (jax.random.normal(jax.random.fold_in(key, i), (n,))
+               for i in range(3))
+    f = jax.jit(lambda w, g, v: fedplt_update_ref(w, g, v, gamma=0.1,
+                                                  inv_rho=1.0))
+    us = _bench(f, w, g, v)
+    rows.append(f"kernel,fedplt_update_ref_1M,{us:.1f},"
+                f"GBps={3 * 4 * n / us / 1e3:.2f}")
+
+    B, S, H, D = 1, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(key, (B, S, H, D))
+    vv = jax.random.normal(key, (B, S, H, D))
+    f = jax.jit(lambda q, k, v: flash_attention_ref(q, k, v, causal=True))
+    us = _bench(f, q, k, vv, iters=5)
+    fl = 4 * B * H * S * S * D
+    rows.append(f"kernel,attention_ref_1k,{us:.1f},"
+                f"GFLOPs={fl / us / 1e3:.2f}")
+
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 2048, 256)))
+    b = jax.random.normal(key, (4, 2048, 256))
+    f = jax.jit(lru_scan_ref)
+    us = _bench(f, a, b, iters=5)
+    rows.append(f"kernel,lru_scan_ref_2k,{us:.1f},"
+                f"GBps={2 * 4 * a.size / us / 1e3:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,26 @@
+"""Proposition 4 privacy curves: RDP/ADP epsilon vs K*N_e, showing the
+bounded privacy-loss ceiling (the paper's headline result)."""
+
+from benchmarks.common import paper_problem
+from repro.core import privacy
+
+
+def run(quick=True):
+    rows = []
+    prob = paper_problem()
+    mu = prob.strong_convexity()
+    gamma, tau = 0.1, 0.1
+    lam = 8.0
+    ceiling = privacy.rdp_to_adp(
+        privacy.rdp_epsilon_limit(lam, 1.0, mu, tau, prob.q), lam, 1e-5)
+    for k in (1, 10, 100, 1000, 10000):
+        for ne in (1, 5, 20):
+            eps, _ = privacy.adp_epsilon(1.0, mu, tau, prob.q, gamma, k,
+                                         ne, 1e-5)
+            rows.append(f"privacy,K{k}_Ne{ne},{eps:.5g},"
+                        f"ceiling,{ceiling:.5g}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,46 @@
+"""Render the dry-run JSON results into the EXPERIMENTS.md roofline table."""
+
+import json
+import sys
+
+
+def fmt(x):
+    return f"{x:.3e}" if isinstance(x, float) else str(x)
+
+
+def render(results):
+    lines = [
+        "| arch | shape | mesh | status | compute_s | memory_s | "
+        "collective_s | bottleneck | useful_ratio | params |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status']} | - | - | - | - | - | - |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{rl['compute_s']:.3e} | {rl['memory_s']:.3e} | "
+            f"{rl['collective_s']:.3e} | {rl['bottleneck']} | "
+            f"{rl['useful_ratio']:.3f} | {r['params']/1e9:.2f}B |")
+    return "\n".join(lines)
+
+
+def run(quick=True, path="dryrun_results.json"):
+    try:
+        with open(path) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        return [f"roofline,skipped,no {path} (run repro.launch.dryrun "
+                f"--all first)"]
+    ok = sum(r["status"] == "ok" for r in results)
+    return [f"roofline,cases_ok,{ok},of,{len(results)}"]
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        print(render(json.load(f)))

@@ -1,0 +1,62 @@
+"""Benchmark driver: one harness per paper table + kernel microbench.
+
+Prints ``table,name,value...`` CSV rows (time-to-threshold in the paper's
+(t_G, t_C) units, final criterion, hit rate).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,...]
+"""
+
+import argparse
+import sys
+import time
+
+from benchmarks import (compression_bench, kernel_bench,
+                        privacy_bounds, roofline_report,
+                        table2_comparison, table3_tc_sweep,
+                        table4_solvers_pp, table5_large_n,
+                        table6_participation, table7_privacy_noise,
+                        table8_rho, table9_ne)
+
+MODULES = {
+    "table2": table2_comparison,
+    "table3": table3_tc_sweep,
+    "table4": table4_solvers_pp,
+    "table5": table5_large_n,
+    "table6": table6_participation,
+    "table7": table7_privacy_noise,
+    "table8": table8_rho,
+    "table9": table9_ne,
+    "privacy": privacy_bounds,
+    "compression": compression_bench,
+    "kernel": kernel_bench,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="more Monte-Carlo seeds (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("table,name,time_or_value,final_or_aux,extra")
+    failures = 0
+    for name, mod in MODULES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.run(quick=not args.full):
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table II: convergence-speed comparison, convex and nonconvex,
+t_G = 1, t_C = 10, N_e = 5."""
+
+from benchmarks.common import algorithm_suite, csv_row, paper_problem, run_algo
+
+NE = 5
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1, 2) if quick else tuple(range(20))
+    for setting, nonconvex, rounds in [("convex", False, 400),
+                                       ("nonconvex", True, 600)]:
+        prob = paper_problem(nonconvex=nonconvex)
+        for name, algo in algorithm_suite(prob, n_epochs=NE).items():
+            n = rounds * NE if name == "tamuna" else rounds
+            res = run_algo(algo, n, seeds=seeds, t_G=1.0, t_C=10.0)
+            rows.append(csv_row(f"table2_{setting}", name, res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

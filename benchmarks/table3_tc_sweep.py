@@ -1,0 +1,22 @@
+"""Table III: convergence speed vs communication cost t_C (convex)."""
+
+from benchmarks.common import algorithm_suite, csv_row, paper_problem, run_algo
+
+NE = 5
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1, 2) if quick else tuple(range(20))
+    prob = paper_problem()
+    suite = algorithm_suite(prob, n_epochs=NE)
+    for t_C in (0.1, 1.0, 10.0, 100.0):
+        for name, algo in suite.items():
+            n = 400 * NE if name == "tamuna" else 400
+            res = run_algo(algo, n, seeds=seeds, t_G=1.0, t_C=t_C)
+            rows.append(csv_row(f"table3_tc{t_C}", name, res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

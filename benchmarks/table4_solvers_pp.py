@@ -1,0 +1,44 @@
+"""Table IV: local solvers (GD / accelerated GD) x partial participation
+(100% vs 50% of agents), t_G = 1, t_C = 10."""
+
+from benchmarks.common import (csv_row, fedplt_runner, paper_problem,
+                               run_algo)
+from repro.core import baselines
+
+NE = 5
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1, 2) if quick else tuple(range(20))
+    prob = paper_problem()
+    cases = {
+        "fedplt_gd": fedplt_runner(prob, solver="gd", n_epochs=NE),
+        "fedplt_gd_pp": fedplt_runner(prob, solver="gd", n_epochs=NE,
+                                      participation=0.5),
+        "fedplt_agd": fedplt_runner(prob, solver="agd", n_epochs=NE),
+        "fedplt_agd_pp": fedplt_runner(prob, solver="agd", n_epochs=NE,
+                                       participation=0.5),
+        "5gcs_gd": baselines.make_5gcs(prob, eta=1.0, n_epochs=NE,
+                                       participation=1.0),
+        "5gcs_gd_pp": baselines.make_5gcs(prob, eta=1.0, n_epochs=NE,
+                                          participation=0.5),
+        "5gcs_agd": baselines.make_5gcs(prob, eta=1.0, n_epochs=NE,
+                                        participation=1.0, solver="agd"),
+        "5gcs_agd_pp": baselines.make_5gcs(prob, eta=1.0, n_epochs=NE,
+                                           participation=0.5,
+                                           solver="agd"),
+        "tamuna": baselines.make_tamuna(prob, gamma=0.2, p_comm=1.0 / NE),
+        "tamuna_pp": baselines.make_tamuna(prob, gamma=0.2,
+                                           p_comm=1.0 / NE,
+                                           participation=0.5),
+    }
+    for name, algo in cases.items():
+        n = 800 * NE if name.startswith("tamuna") else 800
+        res = run_algo(algo, n, seeds=seeds, t_G=1.0, t_C=10.0)
+        rows.append(csv_row("table4", name, res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,22 @@
+"""Table V: scalability -- problem size n = 100, t_G = 20, t_C scaled."""
+
+from benchmarks.common import algorithm_suite, csv_row, paper_problem, run_algo
+
+NE = 5
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1) if quick else tuple(range(10))
+    prob = paper_problem(dim=100)
+    suite = algorithm_suite(prob, n_epochs=NE)
+    for t_C in (2.0, 20.0, 200.0, 2000.0):
+        for name, algo in suite.items():
+            n = 600 * NE if name == "tamuna" else 600
+            res = run_algo(algo, n, seeds=seeds, t_G=20.0, t_C=t_C)
+            rows.append(csv_row(f"table5_tc{t_C}", name, res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,20 @@
+"""Table VI: Fed-PLT convergence vs participation percentage."""
+
+from benchmarks.common import csv_row, fedplt_runner, paper_problem, run_algo
+
+NE = 5
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1, 2) if quick else tuple(range(20))
+    prob = paper_problem()
+    for pct in (0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0):
+        algo = fedplt_runner(prob, n_epochs=NE, participation=pct)
+        res = run_algo(algo, 800, seeds=seeds, t_G=1.0, t_C=10.0)
+        rows.append(csv_row("table6", f"active{int(pct*100)}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

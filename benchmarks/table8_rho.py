@@ -1,0 +1,19 @@
+"""Table VIII: Fed-PLT performance vs penalty rho (non-monotone;
+best near rho = 1)."""
+
+from benchmarks.common import csv_row, fedplt_runner, paper_problem, run_algo
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1, 2) if quick else tuple(range(20))
+    prob = paper_problem()
+    for rho in (0.1, 1.0, 10.0):
+        algo = fedplt_runner(prob, n_epochs=5, rho=rho)
+        res = run_algo(algo, 2000, seeds=seeds, t_G=1.0, t_C=10.0)
+        rows.append(csv_row("table8", f"rho{rho:g}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,20 @@
+"""Table IX: Fed-PLT vs number of local epochs N_e across t_C -- the
+paper's key observation: optimal N_e is finite and grows with t_C."""
+
+from benchmarks.common import csv_row, fedplt_runner, paper_problem, run_algo
+
+
+def run(quick=True):
+    rows = []
+    seeds = (0, 1, 2) if quick else tuple(range(20))
+    prob = paper_problem()
+    for ne in (1, 2, 5, 8, 10, 20):
+        algo = fedplt_runner(prob, n_epochs=ne)
+        for t_C in (0.1, 1.0, 10.0, 100.0):
+            res = run_algo(algo, 2000, seeds=seeds, t_G=1.0, t_C=t_C)
+            rows.append(csv_row(f"table9_tc{t_C}", f"ne{ne}", res))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,108 @@
+"""Continuous batching: serve a stream of requests through fixed decode
+slots (vLLM-style scheduling, simplified).
+
+Per-sequence cache positions let each slot sit at a different depth:
+while one request is still consuming its prompt (prefill-by-decode),
+others are generating, and finished slots are freed (`reset_slots`) and
+immediately refilled from the queue -- no global synchronization.
+
+Run:  PYTHONPATH=src python examples/continuous_batching.py
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.decode import reset_slots
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-prompt", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(1))
+
+    # request queue: random-length prompts
+    queue = [rng.integers(0, cfg.vocab,
+                          rng.integers(3, args.max_prompt + 1)).tolist()
+             for _ in range(args.requests)]
+
+    B = args.slots
+    cache_len = args.max_prompt + args.gen_len
+    cache = model.init_cache(batch=B, cache_len=cache_len)
+    decode = jax.jit(lambda p, c, t: model.decode_step(p, cache=c,
+                                                       tokens=t))
+
+    slot_req = [-1] * B          # request id per slot (-1 = free)
+    slot_prompt: list[list] = [[] for _ in range(B)]   # remaining prompt
+    slot_out: list[list] = [[] for _ in range(B)]
+    done: dict[int, list] = {}
+    next_req = 0
+    steps = 0
+    t0 = time.time()
+
+    while len(done) < args.requests:
+        # admit new requests into free slots
+        for b in range(B):
+            if slot_req[b] == -1 and next_req < args.requests:
+                slot_req[b] = next_req
+                slot_prompt[b] = list(queue[next_req])
+                slot_out[b] = []
+                next_req += 1
+
+        # build the next token per slot: prompt token (teacher-forced) or
+        # last generated token
+        toks = []
+        for b in range(B):
+            if slot_req[b] == -1:
+                toks.append(0)
+            elif slot_prompt[b]:
+                toks.append(slot_prompt[b].pop(0))
+            else:
+                toks.append(slot_out[b][-1])
+        logits, cache = decode(params, cache,
+                               jnp.asarray(toks, jnp.int32))
+        steps += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+
+        # collect generations / retire finished slots
+        finished = np.zeros(B, bool)
+        for b in range(B):
+            if slot_req[b] == -1:
+                continue
+            if not slot_prompt[b]:          # past the prompt: generating
+                slot_out[b].append(int(nxt[b]))
+            if len(slot_out[b]) >= args.gen_len:
+                done[slot_req[b]] = slot_out[b]
+                finished[b] = True
+                slot_req[b] = -1
+        if finished.any():
+            cache = reset_slots(cache, jnp.asarray(finished))
+
+    dt = time.time() - t0
+    total_tokens = sum(len(v) for v in done.values())
+    print(f"served {args.requests} requests through {B} slots in "
+          f"{steps} decode steps ({dt:.1f}s, "
+          f"{total_tokens/dt:.1f} gen tok/s)")
+    naive_steps = sum(len(q) + args.gen_len for q in queue)
+    print(f"continuous batching: {steps} steps vs {naive_steps} "
+          f"sequential steps (x{naive_steps/steps:.1f} utilization)")
+    for rid in sorted(done)[:3]:
+        print(f"request {rid}: {done[rid][:8]}...")
+
+
+if __name__ == "__main__":
+    main()

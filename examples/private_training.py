@@ -1,0 +1,60 @@
+"""Differentially-private federated training with Fed-PLT.
+
+Walks the paper's privacy pipeline end to end:
+  1. pick a target (eps, delta)-ADP budget,
+  2. calibrate the noise variance tau (Prop. 4 inverted),
+  3. train with noisy local GD,
+  4. report the achieved accuracy and the privacy ceiling.
+
+Run:  PYTHONPATH=src python examples/private_training.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import privacy, theory
+from repro.core.fedplt import FedPLT, FedPLTConfig
+from repro.core.problem import make_logreg_problem
+from repro.core.solvers import SolverConfig
+
+
+def main():
+    problem = make_logreg_problem(n_agents=100, q=250, dim=5, seed=0)
+    mu, L = problem.strong_convexity(), problem.smoothness()
+    K, delta = 300, 1e-5
+    # pick (rho, gamma, N_e) that make S contractive (Lemma 7 grid)
+    stab = theory.stabilize(mu, L, n_epochs_grid=(5,))
+    rho, gamma, n_epochs = stab.rho, stab.gamma, stab.n_epochs
+    print(f"Lemma-7 stabilizer: rho={rho:.3f} gamma={gamma:.3f} "
+          f"N_e={n_epochs} ||S||={stab.s_norm:.3f}")
+
+    target_eps = 2.0
+    tau = privacy.calibrate_noise(target_eps, delta, sensitivity=1.0,
+                                  mu=mu, q=problem.q, gamma=gamma, K=K,
+                                  n_epochs=n_epochs)
+    print(f"target ({target_eps}, {delta})-ADP  =>  tau = {tau:.4f}")
+
+    rep = privacy.PrivacyReport.build(1.0, mu, tau, problem.q, gamma, K,
+                                      n_epochs, delta)
+    print(f"achieved eps = {rep.adp_eps:.3f} at Renyi order "
+          f"{rep.rdp_order:.1f}; ceiling as K*Ne->inf: "
+          f"{rep.eps_ceiling:.3f}")
+
+    algo = FedPLT(problem, FedPLTConfig(
+        rho=rho, dp_init=True,
+        solver=SolverConfig(name="noisy_gd", n_epochs=n_epochs, tau=tau,
+                            step_size=gamma)))
+    state, crit = algo.run(jax.random.PRNGKey(0), K)
+    crit = np.asarray(crit)
+
+    bound = theory.corollary1_bound(K, mu, L, rho, gamma, n_epochs, tau,
+                                    problem.dim, problem.n_agents,
+                                    r0=float(np.linalg.norm(state.x)))
+    print(f"\nafter K={K} rounds: criterion = {crit[-1]:.3e}")
+    print(f"asymptotic error bound (Cor. 1): {bound:.3e}")
+    print(f"privacy does NOT degrade with more local epochs: the ceiling "
+          f"above holds for ANY N_e (Prop. 4).")
+
+
+if __name__ == "__main__":
+    main()

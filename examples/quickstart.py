@@ -1,0 +1,57 @@
+"""Quickstart: Fed-PLT on the paper's logistic-regression federation.
+
+Reproduces the core claims in ~30 seconds on CPU:
+  1. exact convergence with local training (no client drift),
+  2. partial participation,
+  3. comparison against FedAvg's drift plateau.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core.baselines import make_fedavg
+from repro.core.fedplt import FedPLT, FedPLTConfig
+from repro.core.metrics import hitting_round
+from repro.core.problem import make_logreg_problem
+from repro.core.solvers import SolverConfig
+
+
+def main():
+    problem = make_logreg_problem(n_agents=100, q=250, dim=5, seed=0)
+    print(f"problem: N={problem.n_agents} agents, n={problem.dim}, "
+          f"mu={problem.strong_convexity():.2f}, "
+          f"L={problem.smoothness():.2f}")
+
+    # --- Fed-PLT, 5 local epochs, full participation ----------------------
+    algo = FedPLT(problem, FedPLTConfig(
+        rho=1.0, solver=SolverConfig(name="gd", n_epochs=5)))
+    state, crit = algo.run(jax.random.PRNGKey(0), 200)
+    crit = np.asarray(crit)
+    print(f"\nFed-PLT     : criterion {crit[-1]:.2e} after 200 rounds "
+          f"(threshold hit at round {hitting_round(crit)})")
+
+    # --- with partial participation (50% of agents per round) -----------
+    algo_pp = FedPLT(problem, FedPLTConfig(
+        rho=1.0, participation=0.5,
+        solver=SolverConfig(name="gd", n_epochs=5)))
+    _, crit_pp = algo_pp.run(jax.random.PRNGKey(0), 400)
+    crit_pp = np.asarray(crit_pp)
+    print(f"Fed-PLT 50% : criterion {crit_pp[-1]:.2e} after 400 rounds "
+          f"(hit at {hitting_round(crit_pp)})")
+
+    # --- FedAvg drifts ---------------------------------------------------
+    fedavg = make_fedavg(problem, gamma=0.1, n_epochs=5)
+    crit_avg = np.asarray(fedavg.run(jax.random.PRNGKey(0), 400))
+    print(f"FedAvg      : plateaus at {crit_avg[-1]:.2e} (client drift; "
+          f"never reaches 1e-5)")
+
+    x_bar = algo.x_bar(state)
+    x_star = problem.solve()
+    print(f"\n||x_bar - x*|| = {np.linalg.norm(x_bar - x_star):.2e} "
+          f"(exact convergence, Prop. 2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver: federated training of a ~100M-param transformer
+with Fed-PLT for a few hundred rounds on CPU.
+
+This is the 'train a ~100M model' end-to-end deliverable: a gemma2-family
+model (vocab 8192, 4 layers, d_model 512 => ~97M params counting embeddings)
+trained over 4 agents with non-IID synthetic streams, 3 local epochs per
+round, partial participation, and optional DP noise.
+
+Run:  PYTHONPATH=src python examples/train_lm_federated.py \
+          [--rounds 300] [--tau 0.001]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.checkpoint import save_checkpoint
+from repro.data.synthetic import fed_lm_batches
+from repro.fed import runtime
+from repro.models.model import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=300)
+    ap.add_argument("--n-agents", type=int, default=4)
+    ap.add_argument("--n-epochs", type=int, default=3)
+    ap.add_argument("--tau", type=float, default=0.0)
+    ap.add_argument("--participation", type=float, default=0.75)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    # ~100M-param member of the gemma2 family:
+    # embed 32768x768 = 25.2M + 8 layers x (attn 1.8M + geglu MLP 7.1M)
+    cfg = dataclasses.replace(
+        get_config("gemma2-2b"),
+        n_layers=8, d_model=768, n_heads=12, n_kv_heads=6, head_dim=64,
+        d_ff=3072, vocab=32768, window=64, dtype="float32",
+    )
+    model = build_model(cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"model: gemma2-family, {n_params/1e6:.1f}M params")
+
+    fcfg = runtime.FedConfig(
+        n_agents=args.n_agents, rho=1.0, gamma=0.1,
+        n_epochs=args.n_epochs, participation=args.participation,
+        tau=args.tau, clip=1.0 if args.tau > 0 else None)
+    state = runtime.init_state(model, jax.random.PRNGKey(0), fcfg)
+    step = jax.jit(runtime.make_train_step(model, fcfg))
+
+    shape = InputShape("lm", args.seq_len, args.batch, "train")
+    batches = fed_lm_batches(cfg, shape, args.n_agents)
+    t0 = time.time()
+    for i in range(args.rounds):
+        state, metrics = step(state, next(batches),
+                              jax.random.PRNGKey(i))
+        if i % 10 == 0 or i == args.rounds - 1:
+            print(f"round {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"part={float(metrics['participation']):.2f} "
+                  f"({time.time() - t0:.0f}s)")
+
+    final = runtime.consensus_model(state)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, final, step=args.rounds)
+        print("checkpoint saved:", args.checkpoint)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro -- Fed-PLT (Federated Private Local Training) in JAX.
+
+A production-grade, multi-pod JAX framework reproducing and extending
+
+    "Enhancing Privacy in Federated Learning through Local Training"
+    N. Bastianello, C. Liu, K. H. Johansson (2024).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Checkpointing: npz leaves + JSON treedef, shard-aware restore."""
+
+from repro.checkpoint.io import save_checkpoint, restore_checkpoint  # noqa: F401

@@ -1,0 +1,59 @@
+"""Checkpointing: flattened npz leaves + JSON key manifest.
+
+Host-side, framework-free (numpy) so checkpoints survive JAX upgrades;
+restore re-shards onto the current mesh via device_put when given
+shardings.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree, step: int | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(path, "leaves.npz"), **flat)
+    treedef = jax.tree_util.tree_structure(tree)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"keys": sorted(flat), "step": step,
+                   "treedef": str(treedef)}, f)
+
+
+def restore_checkpoint(path: str, like, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Optionally device_put with ``shardings``."""
+    data = np.load(os.path.join(path, "leaves.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, leaf in flat_like[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_k)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def checkpoint_step(path: str) -> int | None:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("step")

@@ -1,0 +1,47 @@
+"""Architecture config registry: ``get_config("<arch-id>")``.
+
+Assigned architectures (public-literature pool), one module each.
+"""
+
+from repro.configs.base import ModelConfig, InputShape, SHAPES  # noqa: F401
+
+from repro.configs import (  # noqa: E402
+    phi4_mini_3_8b,
+    falcon_mamba_7b,
+    whisper_small,
+    gemma2_2b,
+    qwen2_moe_a2_7b,
+    grok_1_314b,
+    recurrentgemma_2b,
+    gemma3_12b,
+    internvl2_26b,
+    nemotron_4_340b,
+    fedplt_logreg,
+)
+
+REGISTRY = {
+    "phi4-mini-3.8b": phi4_mini_3_8b.CONFIG,
+    "falcon-mamba-7b": falcon_mamba_7b.CONFIG,
+    "whisper-small": whisper_small.CONFIG,
+    "gemma2-2b": gemma2_2b.CONFIG,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b.CONFIG,
+    "grok-1-314b": grok_1_314b.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+    "gemma3-12b": gemma3_12b.CONFIG,
+    "internvl2-26b": internvl2_26b.CONFIG,
+    "nemotron-4-340b": nemotron_4_340b.CONFIG,
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}")
+
+
+def get_shape(shape_id: str) -> InputShape:
+    return SHAPES[shape_id]

@@ -1,0 +1,14 @@
+"""Core Fed-PLT library: the paper's contribution as composable JAX modules.
+
+Layout
+------
+problem.py   -- federated ERM problems (logistic regression, quadratics)
+prox.py      -- proximal / reflective operator library
+solvers.py   -- local training solvers: GD, accelerated GD, SGD, noisy GD
+fedplt.py    -- Algorithm 1 (Fed-PLT): PRS-based federated learning
+theory.py    -- contraction constants, S matrix, Lemma 7 stabilizer, Cor. 1
+privacy.py   -- RDP/ADP accountant (Prop. 4, Lemma 5), noise calibration
+baselines.py -- FedAvg, FedSplit, FedPD, FedLin, SCAFFOLD, ProxSkip,
+                TAMUNA, LED, 5GCS
+metrics.py   -- convergence criteria and the paper's (t_G, t_C) time model
+"""

@@ -1,0 +1,472 @@
+"""Baseline federated algorithms compared against Fed-PLT (paper Sec. I-A).
+
+All baselines share the interface
+
+    algo = make_<name>(problem, **hyperparams)
+    crit_history = algo.run(key, n_rounds)        # (n_rounds,) criterion
+
+with the paper's criterion ``|| sum_i grad f_i(x_bar) ||^2`` recorded after
+every communication round, and a ``time_per_round(t_G, t_C)`` implementing
+the Table-II accounting.
+
+Implementation provenance (documented deviations):
+  * FedAvg        -- McMahan et al. (reference point, not in the tables).
+  * FedSplit [34] -- PRS without warm start (inner GD initialized at the
+                     reflected point, *not* at the previous local model).
+  * FedPD  [35]   -- augmented-Lagrangian form, warm-started inner GD.
+  * FedLin [36]   -- two communications per round (gradient sync + model).
+  * SCAFFOLD      -- option-II control variates.
+  * ProxSkip [19] -- a.k.a. Scaffnew; probabilistic communication.
+  * TAMUNA [37]   -- implemented in its LT+PP form without compression
+                     (the paper's tables use exactly this regime:
+                     geometric local epochs, client sampling).
+  * LED    [38]   -- implemented in its equivalent control-variate server
+                     form (drift-corrected local GD with zero-mean duals);
+                     same fixed points, see docstring.
+  * 5GCS   [14]   -- RandProx/Point-SAGA form: sampled clients approximate
+                     prox_{alpha f_i} with any local solver, dual table on
+                     the server.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def _local_gd(problem, data_i, w0, n_epochs, gamma, correction=None):
+    """n_epochs of  w -= gamma * (grad f_i(w) + correction)."""
+
+    def body(w, _):
+        g = jax.grad(lambda xx: problem.local_loss(data_i, xx))(w)
+        if correction is not None:
+            g = g + correction
+        return w - gamma * g, None
+
+    w, _ = jax.lax.scan(body, w0, None, length=n_epochs)
+    return w
+
+
+def _local_gd_fn(problem, data_i, w0, n_epochs, gamma, grad_mod):
+    """n_epochs of  w -= gamma * grad_mod(grad f_i(w), w)."""
+
+    def body(w, _):
+        g = jax.grad(lambda xx: problem.local_loss(data_i, xx))(w)
+        return w - gamma * grad_mod(g, w), None
+
+    w, _ = jax.lax.scan(body, w0, None, length=n_epochs)
+    return w
+
+
+def _agent_data(problem):
+    if hasattr(problem, "A"):
+        return (problem.A, problem.b)
+    return (problem.Q, problem.c)
+
+
+def _masked_mean(w, u, fallback):
+    """Mean over active agents (u in {0,1}); falls back when none active."""
+    cnt = jnp.sum(u)
+    m = jnp.sum(w * u[:, None], axis=0) / jnp.maximum(cnt, 1.0)
+    return jnp.where(cnt > 0, m, fallback)
+
+
+@dataclasses.dataclass
+class Algorithm:
+    name: str
+    run: Callable  # (key, n_rounds) -> (n_rounds,) criterion history
+    time_per_round: Callable  # (t_G, t_C) -> float
+    comms_per_round: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# FedAvg
+# ---------------------------------------------------------------------------
+
+def make_fedavg(problem, gamma=0.1, n_epochs=5, participation=1.0):
+    N = problem.n_agents
+    data = _agent_data(problem)
+
+    def run(key, n_rounds):
+        x0 = jnp.zeros(problem.dim)
+
+        def round_fn(carry, k):
+            x_bar, = carry
+            w = jax.vmap(lambda d0, d1: _local_gd(
+                problem, (d0, d1), x_bar, n_epochs, gamma))(*data)
+            u = jax.random.bernoulli(k, participation, (N,)).astype(w.dtype)
+            x_new = _masked_mean(w, u, x_bar)
+            crit = problem.criterion(x_new)
+            return (x_new,), crit
+
+        _, crit = jax.lax.scan(round_fn, (x0,),
+                               jax.random.split(key, n_rounds))
+        return crit
+
+    return Algorithm(
+        "fedavg", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (n_epochs * tG + tC) * N_ * participation)
+
+
+# ---------------------------------------------------------------------------
+# FedSplit [34] -- PRS without the warm-start initialization
+# ---------------------------------------------------------------------------
+
+def make_fedsplit(problem, rho=1.0, gamma=None, n_epochs=5):
+    N = problem.n_agents
+    data = _agent_data(problem)
+    mu, L = problem.strong_convexity(), problem.smoothness()
+    if gamma is None:
+        gamma = 2.0 / (mu + L + 2.0 / rho)
+    inv_rho = 1.0 / rho
+
+    def run(key, n_rounds):
+        del key
+        z0 = jnp.zeros((N, problem.dim))
+
+        def round_fn(z, _):
+            x_bar = jnp.mean(z, axis=0)
+            v = 2.0 * x_bar[None, :] - z
+
+            def solve(d0, d1, v_i):
+                # cold start at the reflected point (FedSplit's choice)
+                return _local_gd_fn(problem, (d0, d1), v_i, n_epochs, gamma,
+                                    lambda g, w: g + inv_rho * (w - v_i))
+
+            w = jax.vmap(solve)(*data, v)
+            z_new = z + 2.0 * (w - x_bar[None, :])
+            return z_new, problem.criterion(w)
+
+        _, crit = jax.lax.scan(round_fn, z0, None, length=n_rounds)
+        return crit
+
+    return Algorithm(
+        "fedsplit", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (n_epochs * tG + tC) * N_)
+
+
+# ---------------------------------------------------------------------------
+# FedPD [35]
+# ---------------------------------------------------------------------------
+
+def make_fedpd(problem, eta=1.0, gamma=0.05, n_epochs=5):
+    N = problem.n_agents
+    data = _agent_data(problem)
+    inv_eta = 1.0 / eta
+
+    def run(key, n_rounds):
+        del key
+        x0 = jnp.zeros((N, problem.dim))
+        lam0 = jnp.zeros((N, problem.dim))
+        xbar0 = jnp.zeros(problem.dim)
+
+        def round_fn(carry, _):
+            x, lam, x_bar = carry
+
+            def solve(d0, d1, x_i, lam_i):
+                return _local_gd_fn(
+                    problem, (d0, d1), x_i, n_epochs, gamma,
+                    lambda g, w: g + lam_i + inv_eta * (w - x_bar))
+
+            x_new = jax.vmap(solve)(*data, x, lam)
+            lam_new = lam + inv_eta * (x_new - x_bar[None, :])
+            x_bar_new = jnp.mean(x_new + eta * lam_new, axis=0)
+            return (x_new, lam_new, x_bar_new), problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(round_fn, (x0, lam0, xbar0), None,
+                               length=n_rounds)
+        return crit
+
+    return Algorithm(
+        "fedpd", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (n_epochs * tG + tC) * N_)
+
+
+# ---------------------------------------------------------------------------
+# FedLin [36]
+# ---------------------------------------------------------------------------
+
+def make_fedlin(problem, gamma=0.05, n_epochs=5):
+    N = problem.n_agents
+    data = _agent_data(problem)
+
+    def run(key, n_rounds):
+        del key
+        x0 = jnp.zeros(problem.dim)
+
+        def round_fn(x_bar, _):
+            # communication 1: gradient sync
+            g_at_xbar = problem.grads(
+                jnp.broadcast_to(x_bar, (N, problem.dim)))
+            g_mean = jnp.mean(g_at_xbar, axis=0)
+
+            def solve(d0, d1, g_i):
+                return _local_gd_fn(
+                    problem, (d0, d1), x_bar, n_epochs, gamma,
+                    lambda g, w: g - g_i + g_mean)
+
+            w = jax.vmap(solve)(*data, g_at_xbar)
+            # communication 2: model sync
+            x_new = jnp.mean(w, axis=0)
+            return x_new, problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(round_fn, x0, None, length=n_rounds)
+        return crit
+
+    return Algorithm(
+        "fedlin", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: ((n_epochs + 1) * tG + 2 * tC) * N_,
+        comms_per_round=2.0)
+
+
+# ---------------------------------------------------------------------------
+# SCAFFOLD
+# ---------------------------------------------------------------------------
+
+def make_scaffold(problem, gamma_l=0.05, gamma_g=1.0, n_epochs=5,
+                  participation=1.0):
+    N = problem.n_agents
+    data = _agent_data(problem)
+
+    def run(key, n_rounds):
+        x0 = jnp.zeros(problem.dim)
+        c0 = jnp.zeros(problem.dim)
+        ci0 = jnp.zeros((N, problem.dim))
+
+        def round_fn(carry, k):
+            x_bar, c, c_i = carry
+
+            def solve(d0, d1, ci_):
+                return _local_gd_fn(
+                    problem, (d0, d1), x_bar, n_epochs, gamma_l,
+                    lambda g, w: g - ci_ + c)
+
+            w = jax.vmap(solve)(*data, c_i)
+            c_i_plus = c_i - c + (x_bar[None, :] - w) / (n_epochs * gamma_l)
+            u = jax.random.bernoulli(k, participation, (N,)).astype(w.dtype)
+            dx = _masked_mean(w - x_bar[None, :], u, jnp.zeros(problem.dim))
+            dc = _masked_mean(c_i_plus - c_i, u, jnp.zeros(problem.dim))
+            frac = jnp.sum(u) / N
+            x_new = x_bar + gamma_g * dx
+            c_new = c + frac * dc
+            c_i_new = u[:, None] * c_i_plus + (1 - u[:, None]) * c_i
+            return (x_new, c_new, c_i_new), problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(round_fn, (x0, c0, ci0),
+                               jax.random.split(key, n_rounds))
+        return crit
+
+    return Algorithm(
+        "scaffold", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (n_epochs * tG + tC) * N_ * participation)
+
+
+# ---------------------------------------------------------------------------
+# ProxSkip / Scaffnew [19]
+# ---------------------------------------------------------------------------
+
+def make_proxskip(problem, gamma=0.05, p_comm=0.2):
+    """One *gradient step* per iteration; communication w.p. p_comm.
+
+    To compare on equal rounds, run() treats 1/p_comm iterations as one
+    nominal 'round' so histories align with N_e = 1/p_comm local epochs.
+    """
+    N = problem.n_agents
+    data = _agent_data(problem)
+
+    def run(key, n_rounds):
+        steps = n_rounds  # caller scales
+        x0 = jnp.zeros((N, problem.dim))
+        h0 = jnp.zeros((N, problem.dim))
+
+        def step_fn(carry, k):
+            x, h = carry
+            g = problem.grads(x)
+            x_hat = x - gamma * (g - h)
+            theta = jax.random.bernoulli(k, p_comm)
+            x_comm = jnp.broadcast_to(jnp.mean(x_hat, axis=0),
+                                      x_hat.shape)
+            x_new = jnp.where(theta, x_comm, x_hat)
+            h_new = jnp.where(theta, h + (p_comm / gamma) * (x_new - x_hat),
+                              h)
+            return (x_new, h_new), problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(step_fn, (x0, h0),
+                               jax.random.split(key, steps))
+        return crit
+
+    return Algorithm(
+        "proxskip", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (tG + p_comm * tC) * N_)
+
+
+# ---------------------------------------------------------------------------
+# TAMUNA [37] -- LT + PP form (no compression)
+# ---------------------------------------------------------------------------
+
+def make_tamuna(problem, gamma=0.05, p_comm=0.2, participation=1.0):
+    """Scaffnew-style probabilistic communication + client sampling.
+
+    The number of local epochs between communications is Geom(p_comm)
+    (mean 1/p_comm = N_e), matching the paper's comparison protocol.
+    """
+    N = problem.n_agents
+    data = _agent_data(problem)
+
+    def run(key, n_steps):
+        x0 = jnp.zeros((N, problem.dim))
+        h0 = jnp.zeros((N, problem.dim))
+
+        def step_fn(carry, k):
+            x, h = carry
+            k_comm, k_part = jax.random.split(k)
+            g = problem.grads(x)
+            x_hat = x - gamma * (g - h)
+            theta = jax.random.bernoulli(k_comm, p_comm)
+            u = jax.random.bernoulli(k_part, participation,
+                                     (N,)).astype(x.dtype)
+            x_mean = _masked_mean(x_hat, u, jnp.mean(x_hat, axis=0))
+            active = (u[:, None] > 0)
+            x_comm = jnp.where(active, jnp.broadcast_to(x_mean, x_hat.shape),
+                               x_hat)
+            x_new = jnp.where(theta, x_comm, x_hat)
+            # inactive agents have x_new == x_hat, so their h is unchanged
+            h_new = jnp.where(theta,
+                              h + (p_comm / gamma) * (x_new - x_hat), h)
+            return (x_new, h_new), problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(step_fn, (x0, h0),
+                               jax.random.split(key, n_steps))
+        return crit
+
+    return Algorithm(
+        "tamuna", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (tG + p_comm * tC) * N_ * participation)
+
+
+# ---------------------------------------------------------------------------
+# LED [38] -- control-variate server form
+# ---------------------------------------------------------------------------
+
+def make_led(problem, gamma=0.05, n_epochs=5, beta=1.0):
+    """Local Exact-Diffusion, implemented in its equivalent control-variate
+    server form: agents run drift-corrected local GD
+
+        w <- w - gamma (grad f_i(w) - y_i),      w^0 = x_bar,
+
+    and the zero-mean duals track y_i -> grad f_i(x*):
+
+        y_i <- y_i + beta/(gamma N_e) (x_bar_new - w_i^{N_e}).
+
+    Fixed points coincide with the exact optimum (sum_i y_i = 0 is
+    preserved, so w_i = x_bar for all i forces sum_i grad f_i(x_bar) = 0).
+    """
+    N = problem.n_agents
+    data = _agent_data(problem)
+
+    def run(key, n_rounds):
+        del key
+        x0 = jnp.zeros(problem.dim)
+        y0 = jnp.zeros((N, problem.dim))
+
+        def round_fn(carry, _):
+            x_bar, y = carry
+
+            def solve(d0, d1, y_i):
+                return _local_gd_fn(problem, (d0, d1), x_bar, n_epochs,
+                                    gamma, lambda g, w: g - y_i)
+
+            w = jax.vmap(solve)(*data, y)
+            x_new = jnp.mean(w, axis=0)
+            y_new = y + beta / (gamma * n_epochs) * (x_new[None, :] - w)
+            return (x_new, y_new), problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(round_fn, (x0, y0), None, length=n_rounds)
+        return crit
+
+    return Algorithm(
+        "led", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (n_epochs * tG + tC) * N_)
+
+
+# ---------------------------------------------------------------------------
+# 5GCS [14] -- RandProx / Point-SAGA form with client sampling
+# ---------------------------------------------------------------------------
+
+def make_5gcs(problem, alpha=1.0, eta=0.5, n_epochs=5, participation=0.5,
+              solver: str = "gd"):
+    """Sampled clients approximately solve prox_{alpha f_i}(x + alpha u_i)
+    with N_e local epochs (any solver satisfying a descent condition --
+    here GD or AGD); the server keeps a dual table u_i (N+3 variables).
+    """
+    N = problem.n_agents
+    data = _agent_data(problem)
+    mu, L = problem.strong_convexity(), problem.smoothness()
+    mu_d, L_d = mu + 1.0 / alpha, L + 1.0 / alpha
+    gamma = 2.0 / (mu_d + L_d)
+    inv_alpha = 1.0 / alpha
+
+    def run(key, n_rounds):
+        x0 = jnp.zeros(problem.dim)
+        u0 = jnp.zeros((N, problem.dim))
+        w0 = jnp.zeros((N, problem.dim))  # client-side warm starts
+
+        def round_fn(carry, k):
+            x, u, w_prev = carry
+            sel = jax.random.bernoulli(k, participation, (N,)).astype(
+                x.dtype)
+
+            def solve(d0, d1, u_i, w_i):
+                v_i = x + alpha * u_i
+                if solver == "agd":
+                    beta = ((jnp.sqrt(L_d) - jnp.sqrt(mu_d))
+                            / (jnp.sqrt(L_d) + jnp.sqrt(mu_d)))
+
+                    def body(c, _):
+                        w, up = c
+                        grd = jax.grad(lambda xx: problem.local_loss(
+                            (d0, d1), xx))(w) + inv_alpha * (w - v_i)
+                        un = w - grd / L_d
+                        return (un + beta * (un - up), un), None
+
+                    (w, _), _ = jax.lax.scan(body, (w_i, w_i), None,
+                                             length=n_epochs)
+                    return w
+                return _local_gd_fn(
+                    problem, (d0, d1), w_i, n_epochs, gamma,
+                    lambda g, w: g + inv_alpha * (w - v_i))
+
+            w_hat = jax.vmap(solve)(*data, u, w_prev)
+            g_new = inv_alpha * (x[None, :] + alpha * u - w_hat)
+            u_new = sel[:, None] * g_new + (1 - sel[:, None]) * u
+            w_new = sel[:, None] * w_hat + (1 - sel[:, None]) * w_prev
+            x_new = x - eta * alpha * jnp.mean(u_new, axis=0)
+            return (x_new, u_new, w_new), problem.criterion(x_new)
+
+        _, crit = jax.lax.scan(round_fn, (x0, u0, w0),
+                               jax.random.split(key, n_rounds))
+        return crit
+
+    return Algorithm(
+        "5gcs", jax.jit(run, static_argnums=1),
+        lambda tG, tC, N_=N: (n_epochs * tG + tC) * N_ * participation)
+
+
+REGISTRY = {
+    "fedavg": make_fedavg,
+    "fedsplit": make_fedsplit,
+    "fedpd": make_fedpd,
+    "fedlin": make_fedlin,
+    "scaffold": make_scaffold,
+    "proxskip": make_proxskip,
+    "tamuna": make_tamuna,
+    "led": make_led,
+    "5gcs": make_5gcs,
+}

@@ -1,0 +1,115 @@
+"""Differential-privacy accountant for Fed-PLT (paper Section VI).
+
+Implements:
+  * Proposition 4: (lambda, eps)-RDP of Fed-PLT with noisy GD local
+    training,
+
+        eps_i <= lambda L^2 / (mu tau^2 q_i^2) * (1 - exp(-mu gamma K N_e / 2))
+
+    -- crucially *bounded* as K N_e -> inf (local training does not blow up
+    the privacy budget).
+  * Lemma 5: RDP -> approximate DP conversion, with optimization over the
+    Renyi order lambda.
+  * Noise calibration: smallest tau meeting a target (eps, delta)-ADP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+def rdp_epsilon(lam: float, sensitivity: float, mu: float, tau: float,
+                q: int, gamma: float, K: int, n_epochs: int) -> float:
+    """Proposition 4 worst-case RDP bound (lam = Renyi order > 1).
+
+    ``sensitivity`` is L of Assumption 3 (gradient sensitivity * q_i),
+    ``mu`` the strong-convexity modulus (lambda underbar), ``q`` the
+    smallest local dataset size.
+    """
+    if lam <= 1.0:
+        raise ValueError("Renyi order must be > 1")
+    if tau <= 0.0:
+        return float("inf")
+    cap = lam * sensitivity ** 2 / (mu * tau ** 2 * q ** 2)
+    return float(cap * (1.0 - math.exp(-mu * gamma * K * n_epochs / 2.0)))
+
+
+def rdp_epsilon_limit(lam: float, sensitivity: float, mu: float, tau: float,
+                      q: int) -> float:
+    """K N_e -> infinity privacy ceiling (the paper's headline bound)."""
+    if tau <= 0.0:
+        return float("inf")
+    return float(lam * sensitivity ** 2 / (mu * tau ** 2 * q ** 2))
+
+
+def rdp_to_adp(eps_rdp: float, lam: float, delta: float) -> float:
+    """Lemma 5: (lam, eps)-RDP  =>  (eps + log(1/delta)/(lam-1), delta)-ADP."""
+    return float(eps_rdp + math.log(1.0 / delta) / (lam - 1.0))
+
+
+def adp_epsilon(sensitivity: float, mu: float, tau: float, q: int,
+                gamma: float, K: int, n_epochs: int, delta: float,
+                lam_grid=None) -> tuple[float, float]:
+    """Best ADP epsilon over a grid of Renyi orders; returns (eps, lam*)."""
+    if lam_grid is None:
+        lam_grid = np.concatenate([np.linspace(1.01, 2, 25),
+                                   np.linspace(2, 64, 200),
+                                   np.geomspace(64, 4096, 60)])
+    best_eps, best_lam = float("inf"), None
+    for lam in lam_grid:
+        e = rdp_to_adp(
+            rdp_epsilon(lam, sensitivity, mu, tau, q, gamma, K, n_epochs),
+            lam, delta)
+        if e < best_eps:
+            best_eps, best_lam = e, float(lam)
+    return best_eps, best_lam
+
+
+def calibrate_noise(target_eps: float, delta: float, sensitivity: float,
+                    mu: float, q: int, gamma: float, K: int,
+                    n_epochs: int, tol: float = 1e-6) -> float:
+    """Smallest tau such that Fed-PLT is (target_eps, delta)-ADP
+    (bisection; eps is monotone decreasing in tau)."""
+    lo, hi = 1e-8, 1e6
+    for _ in range(200):
+        mid = math.sqrt(lo * hi)
+        eps, _ = adp_epsilon(sensitivity, mu, mid, q, gamma, K, n_epochs,
+                             delta)
+        if eps > target_eps:
+            lo = mid
+        else:
+            hi = mid
+        if hi / lo < 1.0 + tol:
+            break
+    return hi
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyReport:
+    """Summary of the privacy position of one Fed-PLT configuration."""
+    tau: float
+    K: int
+    n_epochs: int
+    rdp_eps: float
+    rdp_order: float
+    adp_eps: float
+    adp_delta: float
+    eps_ceiling: float       # K*Ne -> inf limit at the same order
+
+    @staticmethod
+    def build(sensitivity, mu, tau, q, gamma, K, n_epochs,
+              delta=1e-5) -> "PrivacyReport":
+        eps, lam = adp_epsilon(sensitivity, mu, tau, q, gamma, K, n_epochs,
+                               delta)
+        return PrivacyReport(
+            tau=tau, K=K, n_epochs=n_epochs,
+            rdp_eps=rdp_epsilon(lam, sensitivity, mu, tau, q, gamma, K,
+                                n_epochs),
+            rdp_order=lam,
+            adp_eps=eps, adp_delta=delta,
+            eps_ceiling=rdp_to_adp(
+                rdp_epsilon_limit(lam, sensitivity, mu, tau, q), lam, delta),
+        )

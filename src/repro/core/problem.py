@@ -1,0 +1,273 @@
+"""Federated empirical-risk-minimization problems (paper Section VII).
+
+A problem bundles per-agent datasets and exposes vectorized local losses and
+gradients.  Data layout: leading axis = agent, i.e. features ``A`` has shape
+``(N, q, n)`` and labels ``b`` shape ``(N, q)``.
+
+The paper's experiment: logistic regression with N=100 agents, n=5 features,
+q_i=250 samples, regularization ``eps * r(x)`` with
+``r(x) = ||x||^2/2`` (convex) or ``r(x) = sum_j x_j^2/(1+x_j^2)``
+(nonconvex), eps = 0.5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Regularizers
+# ---------------------------------------------------------------------------
+
+def reg_l2sq(x: jnp.ndarray) -> jnp.ndarray:
+    return 0.5 * jnp.sum(x * x)
+
+
+def reg_nonconvex(x: jnp.ndarray) -> jnp.ndarray:
+    """The paper's nonconvex regularizer: sum_j x_j^2 / (1 + x_j^2)."""
+    return jnp.sum(x * x / (1.0 + x * x))
+
+
+# ---------------------------------------------------------------------------
+# Logistic regression
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LogRegProblem:
+    """l2/nonconvex-regularized logistic regression, one dataset per agent.
+
+    ``f_i(x) = (1/q_i) sum_h log(1 + exp(-b_ih <a_ih, x>)) + eps * r(x)``
+    """
+
+    A: jnp.ndarray          # (N, q, n)
+    b: jnp.ndarray          # (N, q) in {-1, +1}
+    eps: float = 0.5
+    nonconvex: bool = False
+
+    # -- basic shapes ------------------------------------------------------
+    @property
+    def n_agents(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def q(self) -> int:
+        return self.A.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.A.shape[2]
+
+    # -- losses ------------------------------------------------------------
+    def _reg(self, x: jnp.ndarray) -> jnp.ndarray:
+        return reg_nonconvex(x) if self.nonconvex else reg_l2sq(x)
+
+    def local_loss(self, i_data: tuple[jnp.ndarray, jnp.ndarray],
+                   x: jnp.ndarray) -> jnp.ndarray:
+        """Loss of one agent given its (A_i, b_i)."""
+        A_i, b_i = i_data
+        logits = A_i @ x * b_i
+        return jnp.mean(jnp.log1p(jnp.exp(-logits))) + self.eps * self._reg(x)
+
+    def losses(self, x_stack: jnp.ndarray) -> jnp.ndarray:
+        """Per-agent losses for stacked models ``x_stack`` of shape (N, n)."""
+        return jax.vmap(lambda A_i, b_i, x: self.local_loss((A_i, b_i), x))(
+            self.A, self.b, x_stack)
+
+    def local_grad(self, i_data, x):
+        return jax.grad(lambda xx: self.local_loss(i_data, xx))(x)
+
+    def grads(self, x_stack: jnp.ndarray) -> jnp.ndarray:
+        """Per-agent gradients, stacked (N, n); x_stack may be (N, n) or (n,)."""
+        if x_stack.ndim == 1:
+            x_stack = jnp.broadcast_to(x_stack, (self.n_agents,) + x_stack.shape)
+        return jax.vmap(lambda A_i, b_i, x: self.local_grad((A_i, b_i), x))(
+            self.A, self.b, x_stack)
+
+    def minibatch_grad(self, i_data, x, idx):
+        """Stochastic gradient on rows ``idx`` of one agent's dataset."""
+        A_i, b_i = i_data
+        return jax.grad(
+            lambda xx: self.local_loss((A_i[idx], b_i[idx]), xx))(x)
+
+    # -- the paper's convergence criterion ----------------------------------
+    def criterion(self, x_stack: jnp.ndarray) -> jnp.ndarray:
+        """``|| sum_i grad f_i(x_bar) ||^2`` with ``x_bar = mean_i x_i``."""
+        x_bar = jnp.mean(x_stack, axis=0) if x_stack.ndim > 1 else x_stack
+        g = self.grads(jnp.broadcast_to(x_bar, (self.n_agents, self.dim)))
+        return jnp.sum(jnp.sum(g, axis=0) ** 2)
+
+    # -- curvature estimates -------------------------------------------------
+    def smoothness(self) -> float:
+        """Upper bound on the smoothness modulus of every f_i."""
+        # logistic: Hessian <= A^T A / (4 q); reg adds eps (l2sq) or 2*eps.
+        lams = []
+        A = np.asarray(self.A)
+        for i in range(self.n_agents):
+            s = np.linalg.norm(A[i], ord=2)
+            lams.append(s * s / (4.0 * self.q))
+        reg_smooth = 2.0 * self.eps if self.nonconvex else self.eps
+        return float(np.max(lams) + reg_smooth)
+
+    def strong_convexity(self) -> float:
+        """Strong-convexity modulus (convex case: eps from the l2 reg)."""
+        if self.nonconvex:
+            return 0.0
+        return float(self.eps)
+
+    # -- Remark 1: per-agent moduli for uncoordinated local solvers -------
+    def per_agent_smoothness(self) -> jnp.ndarray:
+        A = np.asarray(self.A)
+        lams = [np.linalg.norm(A[i], ord=2) ** 2 / (4.0 * self.q)
+                for i in range(self.n_agents)]
+        reg = 2.0 * self.eps if self.nonconvex else self.eps
+        return jnp.asarray(np.array(lams) + reg)
+
+    def per_agent_strong_convexity(self) -> jnp.ndarray:
+        mu = 0.0 if self.nonconvex else self.eps
+        return jnp.full((self.n_agents,), mu)
+
+    # -- oracle solution -----------------------------------------------------
+    def solve(self, iters: int = 20_000) -> jnp.ndarray:
+        """High-accuracy solution of ``min_x sum_i f_i(x)`` by full GD
+        (used as the oracle x-bar in tests)."""
+        L = self.smoothness() * self.n_agents
+        step = 1.0 / L
+
+        def total_grad(x):
+            return jnp.sum(self.grads(
+                jnp.broadcast_to(x, (self.n_agents, self.dim))), axis=0)
+
+        def body(x, _):
+            return x - step * total_grad(x), None
+
+        x, _ = jax.lax.scan(body, jnp.zeros(self.dim), None, length=iters)
+        return x
+
+
+def make_logreg_problem(key=None, n_agents: int = 100, q: int = 250,
+                        dim: int = 5, eps: float = 0.5,
+                        nonconvex: bool = False,
+                        heterogeneity: float = 1.0,
+                        seed: int = 0) -> LogRegProblem:
+    """Random logistic-regression federation (paper Section VII set-up).
+
+    ``heterogeneity`` shifts each agent's feature distribution by an
+    agent-specific offset, producing non-IID local data.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ground_truth = jax.random.normal(k1, (dim,))
+    offsets = heterogeneity * jax.random.normal(k2, (n_agents, 1, dim))
+    A = jax.random.normal(k3, (n_agents, q, dim)) + offsets
+    logits = jnp.einsum("nqd,d->nq", A, ground_truth)
+    noise = 0.5 * jax.random.normal(k4, (n_agents, q))
+    b = jnp.where(logits + noise > 0, 1.0, -1.0)
+    # balance roughly 50/50 by construction (random gt, centered features)
+    return LogRegProblem(A=A, b=b, eps=eps, nonconvex=nonconvex)
+
+
+def dirichlet_partition(features: np.ndarray, labels: np.ndarray,
+                        n_agents: int, alpha: float = 0.5,
+                        seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Non-IID label-skew partitioner (Dirichlet over label proportions).
+
+    Returns per-agent stacked arrays trimmed to equal size
+    ``(N, q_min, n)`` / ``(N, q_min)`` so they vectorize.
+    """
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    agent_rows: list[list[int]] = [[] for _ in range(n_agents)]
+    for c in classes:
+        rows = np.flatnonzero(labels == c)
+        rng.shuffle(rows)
+        props = rng.dirichlet(alpha * np.ones(n_agents))
+        counts = np.floor(props * len(rows)).astype(int)
+        counts[-1] = len(rows) - counts[:-1].sum()
+        start = 0
+        for i, cnt in enumerate(counts):
+            agent_rows[i].extend(rows[start:start + cnt])
+            start += cnt
+    q_min = max(1, min(len(r) for r in agent_rows))
+    feats = np.stack([features[r[:q_min]] for r in agent_rows])
+    labs = np.stack([labels[r[:q_min]] for r in agent_rows])
+    return feats, labs
+
+
+# ---------------------------------------------------------------------------
+# Quadratic problems (closed-form optimum; used by tests/property checks)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticProblem:
+    """``f_i(x) = x^T Q_i x / 2 + c_i^T x`` with SPD ``Q_i``; the federated
+    optimum is available in closed form."""
+
+    Q: jnp.ndarray    # (N, n, n), SPD
+    c: jnp.ndarray    # (N, n)
+
+    @property
+    def n_agents(self):
+        return self.Q.shape[0]
+
+    @property
+    def dim(self):
+        return self.Q.shape[-1]
+
+    def local_loss(self, i_data, x):
+        Q_i, c_i = i_data
+        return 0.5 * x @ Q_i @ x + c_i @ x
+
+    def losses(self, x_stack):
+        return jax.vmap(lambda Q_i, c_i, x: self.local_loss((Q_i, c_i), x))(
+            self.Q, self.c, x_stack)
+
+    def grads(self, x_stack):
+        if x_stack.ndim == 1:
+            x_stack = jnp.broadcast_to(x_stack, (self.n_agents,) + x_stack.shape)
+        return jnp.einsum("nij,nj->ni", self.Q, x_stack) + self.c
+
+    def minibatch_grad(self, i_data, x, idx):
+        del idx
+        Q_i, c_i = i_data
+        return Q_i @ x + c_i
+
+    def criterion(self, x_stack):
+        x_bar = jnp.mean(x_stack, axis=0) if x_stack.ndim > 1 else x_stack
+        g = jnp.sum(self.grads(
+            jnp.broadcast_to(x_bar, (self.n_agents, self.dim))), axis=0)
+        return jnp.sum(g ** 2)
+
+    def solve(self):
+        return jnp.linalg.solve(jnp.sum(self.Q, axis=0),
+                                -jnp.sum(self.c, axis=0))
+
+    def smoothness(self):
+        return float(jnp.max(jax.vmap(
+            lambda Q: jnp.linalg.eigvalsh(Q)[-1])(self.Q)))
+
+    def strong_convexity(self):
+        return float(jnp.min(jax.vmap(
+            lambda Q: jnp.linalg.eigvalsh(Q)[0])(self.Q)))
+
+
+def make_quadratic_problem(key=None, n_agents: int = 10, dim: int = 8,
+                           cond: float = 10.0, seed: int = 0):
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    eigs = jnp.linspace(1.0, cond, dim)
+
+    def one(k):
+        H = jax.random.normal(k, (dim, dim))
+        Qmat, _ = jnp.linalg.qr(H)
+        return (Qmat * eigs) @ Qmat.T
+
+    Q = jax.vmap(one)(jax.random.split(k1, n_agents))
+    c = jax.random.normal(k2, (n_agents, dim))
+    return QuadraticProblem(Q=Q, c=c)

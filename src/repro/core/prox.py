@@ -1,0 +1,127 @@
+"""Proximal and reflective operators (paper Definition 3).
+
+All operators are pure jnp functions ``(y, rho) -> x`` with
+``prox_{rho f}(y) = argmin_x f(x) + ||x - y||^2 / (2 rho)``.
+
+The coordinator step of Fed-PLT (Lemma 6) is
+``prox_{rho g}(z) = 1_N (x) prox_{rho h / N}(mean_i z_i)`` -- implemented in
+:func:`coordinator_prox`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+ProxFn = Callable[[jnp.ndarray, float], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Elementary proximal operators
+# ---------------------------------------------------------------------------
+
+def prox_zero(y: jnp.ndarray, rho: float) -> jnp.ndarray:
+    """prox of h = 0 (smooth problems): identity."""
+    del rho
+    return y
+
+
+def prox_l1(y: jnp.ndarray, rho: float) -> jnp.ndarray:
+    """Soft-thresholding: prox of h(x) = ||x||_1."""
+    return jnp.sign(y) * jnp.maximum(jnp.abs(y) - rho, 0.0)
+
+
+def prox_l2sq(y: jnp.ndarray, rho: float) -> jnp.ndarray:
+    """prox of h(x) = ||x||^2 / 2: shrinkage."""
+    return y / (1.0 + rho)
+
+
+def prox_elastic_net(y: jnp.ndarray, rho: float, l1: float = 1.0,
+                     l2: float = 1.0) -> jnp.ndarray:
+    """prox of h(x) = l1 ||x||_1 + (l2/2) ||x||^2."""
+    return prox_l1(y, rho * l1) / (1.0 + rho * l2)
+
+
+def prox_box(y: jnp.ndarray, rho: float, lo: float = -1.0,
+             hi: float = 1.0) -> jnp.ndarray:
+    """prox of the indicator of a box = projection (rho-independent)."""
+    del rho
+    return jnp.clip(y, lo, hi)
+
+
+def prox_linf_ball(y: jnp.ndarray, rho: float, radius: float = 1.0):
+    """Projection onto the l-inf ball."""
+    del rho
+    return jnp.clip(y, -radius, radius)
+
+
+def make_prox(name: str, **kw) -> ProxFn:
+    table = {
+        "zero": prox_zero,
+        "l1": prox_l1,
+        "l2sq": prox_l2sq,
+        "elastic_net": prox_elastic_net,
+        "box": prox_box,
+        "linf_ball": prox_linf_ball,
+    }
+    fn = table[name]
+    if kw:
+        return lambda y, rho: fn(y, rho, **kw)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Derived operators
+# ---------------------------------------------------------------------------
+
+def reflect(prox: ProxFn) -> ProxFn:
+    """Reflective operator refl_{rho f}(y) = 2 prox_{rho f}(y) - y."""
+
+    def refl(y: jnp.ndarray, rho: float) -> jnp.ndarray:
+        return 2.0 * prox(y, rho) - y
+
+    return refl
+
+
+def moreau_conjugate(prox: ProxFn) -> ProxFn:
+    """prox of the convex conjugate via the Moreau identity:
+
+    ``prox_{rho f*}(y) = y - rho prox_{f / rho}(y / rho)``.
+    """
+
+    def prox_star(y: jnp.ndarray, rho: float) -> jnp.ndarray:
+        return y - rho * prox(y / rho, 1.0 / rho)
+
+    return prox_star
+
+
+def prox_of_smooth(grad_fn, y: jnp.ndarray, rho: float, steps: int = 50,
+                   step_size: float | None = None,
+                   smoothness: float = 1.0) -> jnp.ndarray:
+    """Approximate prox of a smooth f by gradient descent on
+    ``d(x) = f(x) + ||x - y||^2 / (2 rho)`` (used when h is not proximable;
+    the induced error is the additive noise allowed by Prop. 2)."""
+    if step_size is None:
+        step_size = 1.0 / (smoothness + 1.0 / rho)
+
+    def body(x, _):
+        g = grad_fn(x) + (x - y) / rho
+        return x - step_size * g, None
+
+    x, _ = jax.lax.scan(body, y, None, length=steps)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Fed-PLT coordinator step (paper Lemma 6)
+# ---------------------------------------------------------------------------
+
+def coordinator_prox(z: jnp.ndarray, rho: float, prox_h: ProxFn) -> jnp.ndarray:
+    """``y = prox_{rho h / N}(mean_i z_i)`` for stacked ``z`` of shape (N, n).
+
+    Returns the (single, shared) coordinator model y of shape (n,).
+    """
+    n_agents = z.shape[0]
+    return prox_h(jnp.mean(z, axis=0), rho / n_agents)

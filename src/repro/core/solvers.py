@@ -1,0 +1,121 @@
+"""Local training solvers (paper Section IV-B).
+
+Every solver approximates the local proximal update
+
+    x_{i,k+1} ~= prox_{rho f_i}(v_i) = argmin_w d_i(w),
+    d_i(w) = f_i(w) + ||w - v_i||^2 / (2 rho)
+
+by ``N_e`` epochs, **warm-started at the previous local state** (the
+initialization that makes Fed-PLT contractive, Section V-C1).
+
+A solver is driven by a per-agent stochastic gradient oracle
+``fgrad(w, key) -> grad f_i(w)`` (deterministic solvers ignore ``key``).
+
+Solvers:
+  * ``gd``        -- gradient descent, Eq. (11)
+  * ``agd``       -- accelerated (Nesterov) GD with constant momentum, Eq. (12)
+  * ``sgd``       -- minibatch SGD (oracle supplies the minibatch gradient)
+  * ``noisy_gd``  -- DP noisy GD, Eq. (13):  w += -gamma grad d + t,
+                     t ~ sqrt(2 gamma) N(0, tau^2 I)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+GradOracle = Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    name: str = "gd"                  # gd | agd | sgd | noisy_gd
+    n_epochs: int = 5                 # N_e
+    step_size: Optional[float] = None  # gamma; None -> optimal for moduli
+    tau: float = 0.0                  # DP noise std (noisy_gd)
+    clip: Optional[float] = None      # clip threshold L for grads (DP)
+
+    def resolve_step_size(self, mu_d: float, L_d: float) -> float:
+        """gamma* = 2/(L_d + mu_d) minimizes the GD contraction factor
+        chi = max(|1 - gamma mu_d|, |1 - gamma L_d|) (Lemma 2)."""
+        if self.step_size is not None:
+            return self.step_size
+        return 2.0 / (L_d + mu_d)
+
+
+def clip_grad(g: jnp.ndarray, clip: Optional[float]) -> jnp.ndarray:
+    """Norm clipping ``g * min(1, C / ||g||)`` (paper Assumption 3 remark)."""
+    if clip is None:
+        return g
+    nrm = jnp.linalg.norm(g)
+    return g * jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+
+
+def local_train(fgrad: GradOracle, w0: jnp.ndarray, v: jnp.ndarray,
+                rho: float, cfg: SolverConfig, key: jax.Array,
+                mu: float, L: float) -> jnp.ndarray:
+    """Run ``cfg.n_epochs`` epochs of the chosen solver on d(w).
+
+    ``mu``/``L`` are strong convexity / smoothness of f_i; d adds 1/rho to
+    both.  Returns w_{N_e}.
+    """
+    mu_d, L_d = mu + 1.0 / rho, L + 1.0 / rho
+    gamma = cfg.resolve_step_size(mu_d, L_d)
+    inv_rho = 1.0 / rho
+
+    def dgrad(w, k):
+        return clip_grad(fgrad(w, k), cfg.clip) + inv_rho * (w - v)
+
+    keys = jax.random.split(key, cfg.n_epochs)
+
+    if cfg.name in ("gd", "sgd"):
+        def body(w, k):
+            return w - gamma * dgrad(w, k), None
+
+        w, _ = jax.lax.scan(body, w0, keys)
+        return w
+
+    if cfg.name == "noisy_gd":
+        noise_scale = jnp.sqrt(2.0 * gamma) * cfg.tau
+
+        def body(w, k):
+            k_batch, k_noise = jax.random.split(k)
+            t = noise_scale * jax.random.normal(k_noise, w.shape)
+            return w - gamma * dgrad(w, k_batch) + t, None
+
+        w, _ = jax.lax.scan(body, w0, keys)
+        return w
+
+    if cfg.name == "agd":
+        # Eq. (12): constant step 1/L_d, constant momentum beta.
+        beta = ((jnp.sqrt(L_d) - jnp.sqrt(mu_d))
+                / (jnp.sqrt(L_d) + jnp.sqrt(mu_d)))
+
+        def body(carry, k):
+            w, u_prev = carry
+            u = w - dgrad(w, k) / L_d
+            w_next = u + beta * (u - u_prev)
+            return (w_next, u), None
+
+        (w, _), _ = jax.lax.scan(body, (w0, w0), keys)
+        return w
+
+    raise ValueError(f"unknown solver {cfg.name!r}")
+
+
+def solver_contraction(cfg: SolverConfig, mu: float, L: float,
+                       rho: float) -> float:
+    """Contraction factor of the *whole* local training map
+    (chi^{N_e} for GD-type, chi(N_e) of Prop. 3 for AGD)."""
+    mu_d, L_d = mu + 1.0 / rho, L + 1.0 / rho
+    if cfg.name in ("gd", "sgd", "noisy_gd"):
+        gamma = cfg.resolve_step_size(mu_d, L_d)
+        chi = max(abs(1.0 - gamma * mu_d), abs(1.0 - gamma * L_d))
+        return float(chi ** cfg.n_epochs)
+    if cfg.name == "agd":
+        kappa = L_d / mu_d
+        return float((1.0 + kappa) * (1.0 - (1.0 / kappa) ** 0.5) ** cfg.n_epochs)
+    raise ValueError(cfg.name)

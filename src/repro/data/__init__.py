@@ -1,0 +1,7 @@
+"""Data pipeline: synthetic streams, federated partitioning, loaders."""
+
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_lm_batch,
+    fed_lm_batches,
+    make_batch_for,
+)

@@ -1,0 +1,1 @@
+"""Large-scale federated runtime: Fed-PLT over TPU meshes."""

@@ -1,0 +1,194 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the meshes.
+
+Scheme (GSPMD logical axes):
+  * tensor-parallel dim (heads / ffn-hidden / experts / vocab) -> 'model'
+  * the other weight dim -> 'data' (FSDP) in standard mode, or replicated
+    within an agent slice in fed mode (the agent axis owns 'data'/'pod')
+  * batch -> 'data' (+ 'pod'); fed mode: leading agent axis -> agent_axis
+  * stacked-unit leading dim (scan over layers) -> replicated
+
+Rules are path-based so they survive arbitrary pytree nesting.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# name fragments that identify the tensor-parallel dim of each weight
+_RULES = [
+    # (leaf-name, spec WITHOUT the stacked-unit axis), fsdp axis slot = 'F'
+    # embed: vocab on 'model' only -- FSDP on d would make the token
+    # gather d-sharded and GSPMD fully rematerializes it (grok iter5)
+    ("embed", ("model", None)),
+    ("lm_head", ("F", "model")),
+    ("wq", ("F", "model")),
+    ("wk", ("F", "model")),
+    ("wv", ("F", "model")),
+    ("wo", ("model", "F")),
+    ("wi", ("F", "model")),
+    ("router", ("F", None)),
+    ("in_proj", ("F", "model")),
+    ("conv_w", (None, "model")),
+    ("conv_b", ("model",)),
+    ("x_proj", ("model", None)),
+    ("dt_proj", (None, "model")),
+    ("dt_bias", ("model",)),
+    ("A_log", ("model", None)),
+    ("D", ("model",)),
+    ("out_proj", ("model", "F")),
+    ("w_branch1", ("F", "model")),
+    ("w_branch2", ("F", "model")),
+    ("w_a", (None, "model")),
+    ("w_x", (None, "model")),
+    ("lam", ("model",)),
+    ("w_out", ("model", "F")),
+]
+_EXPERT_PREFIX = "experts"      # adds a leading 'model' expert axis
+
+
+def _axis_size(axis, axis_sizes):
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= axis_sizes.get(a, 1)
+        return n
+    return axis_sizes.get(axis, 1)
+
+
+def _sanitize(base, shape, axis_sizes):
+    """Drop axes whose size does not divide the dim (pjit requires exact
+    divisibility for explicit in_shardings)."""
+    if axis_sizes is None:
+        return base
+    out = []
+    for dim, axis in zip(shape, base):
+        out.append(axis if dim % _axis_size(axis, axis_sizes) == 0
+                   else None)
+    return out
+
+
+def _leaf_spec(path, leaf, fsdp: Optional[str], reserve_leading: int = 0,
+               axis_sizes: Optional[dict] = None):
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    leaf_name = names[-1] if names else ""
+    expert = _EXPERT_PREFIX in names
+    base = None
+    for frag, spec in _RULES:
+        if leaf_name == frag:
+            base = list(spec)
+            break
+    if base is None:
+        base = []  # norms & misc: replicated
+    # substitute FSDP slot
+    base = [fsdp if a == "F" else a for a in base]
+    ndim = leaf.ndim - reserve_leading
+    shape = leaf.shape[reserve_leading:]
+    if expert and base:
+        # expert-parallel: leading E axis takes 'model' when divisible;
+        # otherwise keep plain TP on the inner dims
+        e_dim = shape[max(0, ndim - len(base) - 1)]
+        if axis_sizes is None or e_dim % _axis_size("model",
+                                                    axis_sizes) == 0:
+            base = [fsdp if a == "model" else a for a in base]
+            base = ["model"] + base
+    # pad leading axes (stacked units / extra nesting) with None
+    while len(base) < ndim:
+        base = [None] + base
+    base = base[:max(ndim, 0)]
+    base = _sanitize(base, shape, axis_sizes)
+    return P(*base)
+
+
+def param_specs(params, *, fsdp_axis: Optional[str] = "data",
+                agent_axis: Optional[str] = None,
+                axis_sizes: Optional[dict] = None):
+    """PartitionSpec pytree for a parameter pytree.
+
+    ``agent_axis``: if set, leaves are assumed to carry a leading stacked
+    agent dimension sharded over that mesh axis (fed mode).
+    ``axis_sizes``: mesh axis sizes; dims not divisible by their assigned
+    axis size fall back to replicated (pjit requires divisibility).
+    """
+    def spec(path, leaf):
+        if agent_axis is not None:
+            s = _leaf_spec(path, leaf, fsdp_axis, reserve_leading=1,
+                           axis_sizes=axis_sizes)
+            return P(agent_axis, *s)
+        return _leaf_spec(path, leaf, fsdp_axis, axis_sizes=axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch_axes=("pod", "data"), agent_axis=None):
+    """Spec for data batches: leading batch dim over data axes (or agent
+    axis first in fed mode: (A, per_agent_batch, ...))."""
+    axes = tuple(a for a in batch_axes if a)
+    if agent_axis is not None:
+        return lambda leaf: P(agent_axis, None) if leaf.ndim == 2 \
+            else P(agent_axis, *([None] * (leaf.ndim - 1)))
+    return lambda leaf: P(axes, *([None] * (leaf.ndim - 1)))
+
+
+def tree_batch_specs(batch, batch_axes=("pod", "data"), agent_axis=None):
+    fn = batch_spec(batch_axes, agent_axis)
+    return jax.tree_util.tree_map(fn, batch)
+
+
+def cache_spec_tree(cache, axis_sizes: dict, data_axes=("data",),
+                    seq_axis: Optional[str] = "model"):
+    """KV/recurrent cache specs with divisibility-aware placement.
+
+    k/v/xk/xv (U, B, C, Hkv, D): batch -> data axes (if divisible),
+    sequence C -> ``seq_axis`` (if divisible).  Recurrent states shard the
+    channel dim over ``seq_axis``.  'pos' index arrays are replicated.
+    """
+    data_axes = tuple(a for a in data_axes if a)
+    data_size = 1
+    for a in data_axes:
+        data_size *= axis_sizes.get(a, 1)
+    seq_size = axis_sizes.get(seq_axis, 1) if seq_axis else 1
+
+    def div(n, k):
+        return k > 1 and n % k == 0
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", "")))
+                 for k in path]
+        name = names[-1] if names else ""
+        if name == "pos" or leaf.ndim <= 1:
+            return P(*([None] * leaf.ndim))
+        batch_axis = data_axes if div(leaf.shape[1], data_size) else None
+        if name in ("k", "v", "xk", "xv"):
+            s = [None, batch_axis] + [None] * (leaf.ndim - 2)
+            if seq_axis and div(leaf.shape[2], seq_size):
+                s[2] = seq_axis
+            return P(*s)
+        if name == "h":       # (U, B, d_in[, n]) or (U, B, w)
+            s = [None, batch_axis] + [None] * (leaf.ndim - 2)
+            if seq_axis and div(leaf.shape[2], seq_size):
+                s[2] = seq_axis
+            return P(*s)
+        if name == "conv":    # (U, B, K-1, C)
+            s = [None, batch_axis, None] + [None] * (leaf.ndim - 3)
+            if seq_axis and leaf.ndim >= 4 and div(leaf.shape[3], seq_size):
+                s[3] = seq_axis
+            return P(*s)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd public wrapper with interpret fallback) and
+<name>/ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+  fedplt_update   -- the paper's fused local training step (elementwise,
+                     3 reads 1 write, optional DP noise) -- the deployed
+                     algorithm's per-parameter hot loop.
+  flash_attention -- blockwise online-softmax attention with GQA,
+                     sliding window and logit softcap (model hot spot).
+  lru_scan        -- chunked diagonal linear recurrence (RG-LRU / mamba
+                     time mixing) with sequential cross-chunk carry.
+
+This container is CPU-only: kernels are validated with interpret=True;
+on TPU set interpret=False (the default resolves via repro.kernels.ON_TPU).
+"""
+
+import jax
+
+ON_TPU = jax.default_backend() == "tpu"

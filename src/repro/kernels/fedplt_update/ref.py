@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused Fed-PLT local step."""
+
+import jax.numpy as jnp
+
+
+def fedplt_update_ref(w, g, v, t=None, *, gamma: float, inv_rho: float):
+    w32 = w.astype(jnp.float32)
+    out = w32 - gamma * (g.astype(jnp.float32)
+                         + inv_rho * (w32 - v.astype(jnp.float32)))
+    if t is not None:
+        out = out + t.astype(jnp.float32)
+    return out.astype(w.dtype)

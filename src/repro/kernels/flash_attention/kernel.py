@@ -1,0 +1,109 @@
+"""Blockwise flash attention for TPU (Pallas).
+
+Online-softmax over KV blocks with an fp32 (m, l, acc) carry held in VMEM
+scratch across the *sequential* innermost grid axis (the canonical TPU
+flash pattern: the kv axis iterates fastest, so scratch persists per
+(batch*head, q-block) cell).
+
+Features needed by the zoo: GQA (kv head = q head // group), causal mask,
+sliding window, logit softcap.  Block sizes are MXU-aligned (128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, cap, block_q, block_k, n_kv_blocks):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (block_q, D)
+    k = k_ref[0].astype(jnp.float32)          # (block_k, D)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+
+    qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(kb == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, cap=None,
+                         block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                         interpret: bool = True):
+    """q: (BH, S, D); k, v: (BH, T, D) -- kv already GQA-expanded by index
+    mapping in ops.py (no materialized repeat).  Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    n_kv_blocks = T // block_k
+    grid = (BH, S // block_q, n_kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, causal=causal, window=window,
+        cap=cap, block_q=block_q, block_k=block_k, n_kv_blocks=n_kv_blocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Public flash-attention op: (B, S, H, D) layout + GQA head mapping."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ON_TPU
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    block_q=128, block_k=128,
+                    interpret: bool | None = None):
+    """q: (B, S, H, D); k, v: (B, T, Hkv, D).  Returns (B, S, H, D)."""
+    if interpret is None:
+        interpret = not ON_TPU
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    # fold (B, H) into one grid axis; GQA expands kv by repeat at the
+    # (cheap) head level -- index-mapped, but jnp repeat here keeps the
+    # kernel single-purpose; the repeat is on the small Hkv axis.
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, T, D)
+    o = flash_attention_bhsd(qf, kf, vf, causal=causal, window=window,
+                             cap=cap, block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)

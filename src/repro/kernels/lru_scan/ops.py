@@ -1,0 +1,26 @@
+"""Public chunked-LRU op with shape handling for the model layers."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ON_TPU
+from repro.kernels.lru_scan.kernel import lru_scan_bsw
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def lru_scan(a, b, *, chunk=128, interpret: bool | None = None):
+    """Diagonal recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: (B, S, W) or (B, S, W, N) (mamba state dim folded into channels).
+    """
+    if interpret is None:
+        interpret = not ON_TPU
+    if a.ndim == 4:
+        B, S, W, N = a.shape
+        out = lru_scan_bsw(a.reshape(B, S, W * N), b.reshape(B, S, W * N),
+                           chunk=chunk, interpret=interpret)
+        return out.reshape(B, S, W, N)
+    return lru_scan_bsw(a, b, chunk=chunk, interpret=interpret)

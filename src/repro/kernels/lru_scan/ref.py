@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the diagonal linear recurrence."""
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_scan_ref(a, b):
+    """a, b: (B, S, W) -> h (B, S, W), h_t = a_t h_{t-1} + b_t, h_{-1}=0."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype)

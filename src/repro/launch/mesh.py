@@ -1,0 +1,47 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state; ``dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to obtain placeholder devices.
+
+  single-pod: (data=16, model=16)            -- 256 chips (v5e pod)
+  multi-pod : (pod=2, data=16, model=16)     -- 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_fed_mesh(n_agents: int = 4, *, multi_pod: bool = False):
+    """Single-pod mesh with a DEDICATED agent axis: (agent, data, model).
+
+    Beyond-paper optimization (EXPERIMENTS.md Perf, grok iteration): the
+    default fed mapping uses the whole 'data' axis as the agent axis,
+    which starves 2D-hungry layers (MoE capacity x ff) of a token axis
+    and triggers GSPMD involuntary full rematerialization.  Splitting
+    16 = n_agents x (16 / n_agents) restores it.
+    """
+    assert 16 % n_agents == 0
+    if multi_pod:
+        return jax.make_mesh((2 * n_agents, 16 // n_agents, 16),
+                             ("agent", "data", "model"))
+    return jax.make_mesh((n_agents, 16 // n_agents, 16),
+                         ("agent", "data", "model"))
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh on the real local devices (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

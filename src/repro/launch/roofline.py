@@ -1,0 +1,187 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (per-device basis; the
+SPMD module is per-device, so dividing the global quantities by `chips`
+and using per-device HLO numbers coincide when the program is balanced):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_bw
+
+``collective_bytes`` is NOT in cost_analysis: we parse the post-SPMD HLO
+text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "%ag = bf16[2,16,128]{2,1,0} all-gather(bf16[2,1,128]{2,1,0} %x), ..."
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+([a-z0-9-]+)\(")
+_OPERAND_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of operand bytes per collective kind (per-device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OP_RE.search(stripped)
+        if not m:
+            continue
+        op = m.group(3)
+        # 'all-reduce-start' etc. normalize
+        base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if base is None:
+            continue
+        # operands: everything inside the call parens
+        call = stripped[m.end():]
+        depth, end = 1, 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = call[:end]
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _OPERAND_RE.findall(operands))
+        out[base] += b
+        counts[base] += 1
+    out_total = sum(out.values())
+    return {"per_kind": out, "counts": counts, "total": out_total}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device (trip-count-aware)
+    hbm_bytes: float             # per-device (trip-count-aware)
+    coll_bytes: float            # per-device (trip-count-aware)
+    coll_detail: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6*N*D analytic (global)
+    useful_ratio: float          # model_flops_per_device / hlo_flops
+    xla_flops: float = 0.0       # raw cost_analysis (loop bodies x1)
+    xla_bytes: float = 0.0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, lowered_text: str | None, model_flops: float,
+            n_devices: int) -> Roofline:
+    """Derive the three terms.  FLOPs/bytes/collectives come from the
+    trip-count-aware HLO analyzer (XLA's cost_analysis counts while-loop
+    bodies once -- see hlo_analysis.py); raw XLA numbers are kept as a
+    cross-check."""
+    from repro.launch import hlo_analysis
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older jax returns [dict]
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+    text = lowered_text if lowered_text is not None else compiled.as_text()
+    costs = hlo_analysis.analyze_text(text)
+    flops = max(costs.flops, xla_flops)
+    hbm = max(costs.bytes, xla_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = costs.coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_dev = model_flops / max(n_devices, 1)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, coll_bytes=float(costs.coll_bytes),
+        coll_detail={"per_kind": dict(costs.coll_by_kind),
+                     "counts": dict(costs.coll_counts)},
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(mf_dev / flops) if flops else 0.0,
+        xla_flops=xla_flops, xla_bytes=xla_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (6 N D for dense; 6 N_active D for MoE)
+# ---------------------------------------------------------------------------
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (routed experts counted top_k/E)."""
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    gated = cfg.activation in ("swiglu", "geglu")
+    per_ff = d * ff * (3 if gated else 2)
+    total = 0
+    kinds = cfg.layer_kinds()
+    for kind in kinds:
+        if kind == "ssm":
+            d_in, n, r = cfg.d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+            total += d * 2 * d_in + d_in * (r + 2 * n) + r * d_in \
+                + d_in * n + d_in * d
+        elif kind == "rec":
+            w = cfg.resolved_lru_width
+            total += 2 * d * w + 2 * w * w + w * d + per_ff
+        else:
+            total += attn
+            if cfg.n_experts:
+                e_ff = cfg.moe_d_ff * (3 if gated else 2) * d
+                total += cfg.top_k * e_ff \
+                    + cfg.n_shared_experts * e_ff + d * cfg.n_experts
+            else:
+                total += per_ff
+    if cfg.n_enc_layers:
+        total += cfg.n_enc_layers * (attn + per_ff) \
+            + cfg.n_layers * attn          # cross attention
+    total += cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    return total
+
+
+def model_flops(cfg, shape, mode: str) -> float:
+    """6 N D (train), 2 N D (prefill/forward), 2 N per token (decode)."""
+    n_active = active_param_count(cfg)
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

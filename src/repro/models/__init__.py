@@ -1,0 +1,7 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+``repro.models.model.build_model(config)`` returns a :class:`Model` bundle
+with ``init / loss_fn / prefill / init_cache / decode_step``.
+"""
+
+from repro.models.model import Model, build_model  # noqa: F401

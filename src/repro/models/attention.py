@@ -1,0 +1,230 @@
+"""Attention: GQA, sliding-window, logit softcap, KV caches.
+
+Two full-sequence implementations:
+
+* ``attn_reference`` -- materializes (B, H, S, T) scores.  Oracle/tests.
+* ``attn_chunked``   -- online-softmax over KV chunks (lax.scan), the
+  production XLA path: peak memory O(S * chunk) instead of O(S^2).
+  (The Pallas flash kernel in ``repro.kernels.flash_attention`` is the
+  TPU-target version of the same algorithm.)
+
+Local (sliding-window) layers additionally use ``attn_block_local``:
+exact sliding-window attention computed block-diagonally (each block of
+size W attends to itself + the previous block), cost O(S * 2W).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, softcap
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def init_attn(key, d_model: int, n_heads: int, n_kv_heads: int,
+              head_dim: int, dtype):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    so = (n_heads * head_dim) ** -0.5
+    return {
+        "wq": (s * jax.random.normal(ks[0], (d_model, n_heads * head_dim))
+               ).astype(dtype),
+        "wk": (s * jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim))
+               ).astype(dtype),
+        "wv": (s * jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim))
+               ).astype(dtype),
+        "wo": (so * jax.random.normal(ks[3], (n_heads * head_dim, d_model))
+               ).astype(dtype),
+    }
+
+
+def qkv(params, x, *, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale, cap):
+    """q: (B,S,Hkv,G,D), k: (B,T,Hkv,D) -> (B,Hkv,G,S,T) fp32 scores."""
+    s = jnp.einsum("bshgd,bthd->bhgst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    return softcap(s, cap)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Hkv,G,S,T), v: (B,T,Hkv,D) -> (B,S,Hkv*G*D)."""
+    o = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1)
+
+
+def attn_reference(q, k, v, *, causal=True, window=None, cap=None,
+                   q_offset=0):
+    """Oracle attention. q: (B,S,H,D); k,v: (B,T,Hkv,D)."""
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = _gqa_scores(qg, k, D ** -0.5, cap)
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def attn_chunked(q, k, v, *, causal=True, window=None, cap=None,
+                 q_offset=0, chunk=1024):
+    """Online-softmax attention, scanning KV chunks (production XLA path)."""
+    B, S, H, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if T % chunk:
+        chunk = T  # degenerate: single chunk
+    n_chunks = T // chunk
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    scale = D ** -0.5
+    qpos = jnp.arange(S) + q_offset
+
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        (k_c, v_c, c_idx) = inputs
+        s = _gqa_scores(qg, k_c, scale, cap)  # (B,Hkv,G,S,chunk)
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p.astype(v_c.dtype), v_c
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks)))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, S, H * D)  # (B,S,Hkv,G,D)->
+    return o.astype(q.dtype)
+
+
+def attn_block_local(q, k, v, *, window, cap=None):
+    """Exact causal sliding-window attention in O(S * 2W).
+
+    Requires S % W == 0.  Each query block (size W) attends to [itself +
+    previous block] with the exact causal+window mask.
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    W = window
+    if S % W or S == W:
+        return attn_reference(q, k, v, causal=True, window=window, cap=cap)
+    nb = S // W
+    G = H // Hkv
+    qb = q.reshape(B, nb, W, Hkv, G, D)
+    kb = k.reshape(B, nb, W, Hkv, D)
+    vb = v.reshape(B, nb, W, Hkv, D)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)   # (B,nb,2W,Hkv,D)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    s = jnp.einsum("bnshgd,bnthd->bnhgst", qb, k2,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    s = softcap(s, cap)
+    qpos = jnp.arange(W)[:, None]           # position within block
+    kpos = jnp.arange(2 * W)[None, :] - W    # relative to block start
+    mask = (kpos <= qpos) & (kpos > qpos - W)
+    first = jnp.arange(nb) == 0              # block 0 has no prev block
+    prev_valid = jnp.where(first[:, None, None], kpos[None] >= 0, True)
+    mask = mask[None, :, :] & prev_valid
+    s = jnp.where(mask[:, None, None, :, :][None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bnhgst,bnthd->bnshgd", p.astype(v2.dtype), v2)
+    return o.reshape(B, S, H * D)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention over a cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
+        # absolute position held in each slot, PER SEQUENCE; -1 = empty
+        # (per-sequence positions enable continuous batching)
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def decode_attn(params, x_t, cache, *, n_heads, n_kv_heads, head_dim,
+                rope_theta, pos, window=None, cap=None, ring=False,
+                rope=True):
+    """One-token attention against a KV cache.
+
+    x_t: (B, d); pos: (B,) int32 per-sequence positions (sequences may be
+    at different depths -- continuous batching).  ``ring=True`` means the
+    cache is a ring buffer of size ``cache_len`` (windowed layers).
+    Returns (out (B, d_attn), new_cache).
+    """
+    B = x_t.shape[0]
+    pos = jnp.broadcast_to(pos, (B,))
+    q = (x_t @ params["wq"]).reshape(B, 1, n_heads, head_dim)
+    k_t = (x_t @ params["wk"]).reshape(B, 1, n_kv_heads, head_dim)
+    v_t = (x_t @ params["wv"]).reshape(B, 1, n_kv_heads, head_dim)
+    if rope:
+        posv = pos[:, None]                     # (B, 1)
+        q = apply_rope(q, posv, rope_theta)
+        k_t = apply_rope(k_t, posv, rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = jnp.mod(pos, C) if ring else jnp.clip(pos, 0, C - 1)  # (B,)
+
+    def upd_row(cache_row, new_row, s):
+        return jax.lax.dynamic_update_slice(cache_row, new_row, (s, 0, 0))
+
+    k = jax.vmap(upd_row)(cache["k"], k_t, slot)
+    v = jax.vmap(upd_row)(cache["v"], v_t, slot)
+    posarr = jax.vmap(
+        lambda row, p, s: jax.lax.dynamic_update_slice(row, p[None], (s,))
+    )(cache["pos"], pos, slot)                  # (B, C)
+
+    G = n_heads // n_kv_heads
+    qg = q.reshape(B, 1, n_kv_heads, G, head_dim)
+    s = _gqa_scores(qg, k, head_dim ** -0.5, cap)  # (B,Hkv,G,1,C)
+    valid = (posarr >= 0) & (posarr <= pos[:, None])
+    if window is not None:
+        valid &= posarr > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _gqa_out(p, v)[:, 0, :]
+    return o, {"k": k, "v": v, "pos": posarr}

@@ -1,0 +1,202 @@
+"""Single-token decode path (serve_step) with KV / recurrent caches.
+
+``init_cache`` builds the cache pytree for a (config, batch, cache_len)
+triple; ``decode_step`` consumes one token per sequence and returns next
+logits + updated cache.  Layer caches:
+
+  'global' -- KV cache of length cache_len (or a ring buffer of
+              ``cfg.long_ctx_global_window`` in long-context mode: the
+              sub-quadratic windowed-global variant, see DESIGN.md)
+  'local'  -- ring-buffer KV cache of length min(window, cache_len)
+  'ssm'    -- (conv_state, h) mamba recurrent state
+  'rec'    -- (conv_state, h) RG-LRU recurrent state
+  'xdec'   -- self-attn KV cache + precomputed cross-attention K/V
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import mlp, rms_norm, softcap
+from repro.models.transformer import build_stages
+from repro.models import moe as moe_lib
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _layer_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                 long_ctx: bool, dtype):
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    if kind == "ssm":
+        return ssm_lib.init_mamba_cache(batch, cfg, dtype)
+    if kind == "rec":
+        return rglru_lib.init_rglru_cache(batch, cfg, dtype)
+    if kind == "local":
+        length = min(cfg.window, cache_len)
+        return attn_lib.init_kv_cache(batch, length, Hkv, D, dtype)
+    # global / xdec self-attention
+    length = (min(cfg.long_ctx_global_window, cache_len) if long_ctx
+              else cache_len)
+    c = attn_lib.init_kv_cache(batch, length, Hkv, D, dtype)
+    if kind == "xdec":
+        c["xk"] = jnp.zeros((batch, cfg.n_enc_tokens, Hkv, D), dtype)
+        c["xv"] = jnp.zeros((batch, cfg.n_enc_tokens, Hkv, D), dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               long_ctx: bool = False):
+    dtype = jnp.dtype(cfg.dtype)
+    stages = build_stages(cfg)
+    caches = []
+    for stage in stages:
+        if stage.unit == ("enc",):
+            continue  # encoder has no decode-time state
+
+        def unit_cache(_):
+            return {str(i): _layer_cache(kind, cfg, batch, cache_len,
+                                         long_ctx, dtype)
+                    for i, kind in enumerate(stage.unit)}
+
+        caches.append(jax.vmap(unit_cache)(jnp.arange(stage.n_units)))
+    # per-sequence positions (continuous batching: sequences may differ)
+    return {"stages": caches, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def fill_cross_cache(params, cfg: ModelConfig, cache, enc_out):
+    """Populate the decoder's cross-attention K/V from encoder output
+    (run once per request before decoding; enc-dec archs only)."""
+    assert cfg.n_enc_layers, "cross cache only exists for enc-dec models"
+    Hkv, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    B, T, _ = enc_out.shape
+    dec_params = params["stages"][1]           # the ('xdec',) stage
+
+    def per_unit(p_unit):
+        xa = p_unit["0"]["xattn"]
+        xk = (enc_out @ xa["wk"]).reshape(B, T, Hkv, D)
+        xv = (enc_out @ xa["wv"]).reshape(B, T, Hkv, D)
+        return xk, xv
+
+    xk, xv = jax.vmap(per_unit)(dec_params)    # (U, B, T, Hkv, D)
+    new_stage = dict(cache["stages"][0])
+    inner = dict(new_stage["0"])
+    inner["xk"], inner["xv"] = xk, xv
+    new_stage["0"] = inner
+    return {"stages": [new_stage] + cache["stages"][1:],
+            "pos": cache["pos"]}
+
+
+def reset_slots(cache, done_mask: jnp.ndarray):
+    """Free finished sequences' slots (continuous batching): zero their
+    positions and invalidate their KV rows.  done_mask: (B,) bool."""
+    def reset_leaf(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k)))
+                 for k in path]
+        name = names[-1] if names else ""
+        if name == "pos" and leaf.ndim == 1:
+            return jnp.where(done_mask, 0, leaf)          # top-level pos
+        if name == "pos":                                 # (U, B, C)
+            return jnp.where(done_mask[None, :, None], -1, leaf)
+        if name in ("h", "conv"):                         # recurrent state
+            mask = done_mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+            return jnp.where(mask, 0, leaf)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(reset_leaf, cache)
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _decode_cross_attn(p, x_t, xk, xv, cfg):
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B = x_t.shape[0]
+    G = H // Hkv
+    q = (x_t @ p["wq"]).reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bshgd,bthd->bhgst", q, xk,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    s = softcap(s, cfg.attn_softcap)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", pr.astype(xv.dtype), xv)
+    return o.reshape(B, -1) @ p["wo"]
+
+
+def _layer_decode(p, c, kind, cfg: ModelConfig, x_t, pos, long_ctx):
+    eps = cfg.norm_eps
+    if kind == "ssm":
+        out, c_new = ssm_lib.mamba_step(p["mamba"],
+                                        rms_norm(x_t, p["ln1"], eps),
+                                        c, cfg)
+        return x_t + out, c_new
+    c_new = dict(c)
+    if kind == "rec":
+        out, cr = rglru_lib.rglru_step(p["rec"],
+                                       rms_norm(x_t, p["ln1"], eps), c, cfg)
+        x_t = x_t + out
+        c_new = cr
+    else:
+        if kind == "local":
+            window, ring = cfg.window, True
+        elif long_ctx:
+            window, ring = cfg.long_ctx_global_window, True
+        else:
+            window, ring = None, False
+        out, kv_new = attn_lib.decode_attn(
+            p["attn"], rms_norm(x_t, p["ln1"], eps),
+            {k: c[k] for k in ("k", "v", "pos")},
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            pos=pos, window=window, cap=cfg.attn_softcap, ring=ring)
+        x_t = x_t + out @ p["attn"]["wo"]
+        c_new.update(kv_new)
+        if kind == "xdec":
+            x_t = x_t + _decode_cross_attn(
+                p["xattn"], rms_norm(x_t, p["ln_x"], eps),
+                c["xk"], c["xv"], cfg)
+    h = rms_norm(x_t, p["ln2"], eps)
+    if "moe" in p:
+        out, _ = moe_lib.moe_ffn(p["moe"], h[:, None, :], cfg)
+        x_t = x_t + out[:, 0, :]
+    else:
+        x_t = x_t + mlp(p["mlp"], h, cfg.activation)
+    return x_t, c_new
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens: jnp.ndarray,
+                long_ctx: bool = False):
+    """tokens: (B,) int32 -> (logits (B, V), new cache).
+
+    cache['pos'] is per-sequence (B,), so batched requests may sit at
+    different depths (continuous batching)."""
+    stages = [s for s in build_stages(cfg) if s.unit != ("enc",)]
+    stage_params = params["stages"][1:] if cfg.n_enc_layers else \
+        params["stages"]
+    pos = cache["pos"]
+    scale = jnp.asarray(cfg.d_model ** 0.5, params["embed"].dtype)
+    x_t = params["embed"][tokens] * scale
+
+    new_stage_caches = []
+    for sp, sc, stage in zip(stage_params, cache["stages"], stages):
+        def unit_body(x_t, inp):
+            up, uc = inp
+            uc_new = {}
+            for i, kind in enumerate(stage.unit):
+                x_t, uc_new[str(i)] = _layer_decode(
+                    up[str(i)], uc[str(i)], kind, cfg, x_t, pos, long_ctx)
+            return x_t, uc_new
+
+        x_t, sc_new = jax.lax.scan(unit_body, x_t, (sp, sc))
+        new_stage_caches.append(sc_new)
+
+    x_t = rms_norm(x_t, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x_t @ head, cfg.final_softcap)
+    return logits, {"stages": new_stage_caches, "pos": pos + 1}

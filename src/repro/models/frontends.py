@@ -1,0 +1,27 @@
+"""Modality frontend STUBS (per the brief's carve-out).
+
+The audio conv/mel feature extractor (whisper) and the ViT+projector
+(internvl2) are not implemented; instead these helpers generate
+correctly-shaped embeddings -- the exact tensors ``input_specs`` describes
+-- so smoke tests and examples can exercise the transformer backbone.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def fake_audio_frames(key, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """Stub of log-mel + conv frontend output: (B, n_enc_tokens, d)."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.n_enc_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+
+
+def fake_patch_embeds(key, cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    """Stub of ViT + MLP-projector output: (B, n_frontend_tokens, d)."""
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.n_frontend_tokens, cfg.d_model),
+        jnp.dtype(cfg.dtype))

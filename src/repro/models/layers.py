@@ -1,0 +1,166 @@
+"""Elementary layers shared across the zoo (pure-jnp, shard-friendly)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (S,) or broadcastable to x[..., :, 0, 0]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / MLPs
+# ---------------------------------------------------------------------------
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+_GATED = {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu}
+_PLAIN = {"relu2": squared_relu, "gelu": jax.nn.gelu}
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype):
+    k1, k2 = jax.random.split(key)
+    width = 2 * d_ff if activation in _GATED else d_ff
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    return {
+        "wi": (s_in * jax.random.normal(k1, (d_model, width))).astype(dtype),
+        "wo": (s_out * jax.random.normal(k2, (d_ff, d_model))).astype(dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    h = x @ params["wi"]
+    if activation in _GATED:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = _GATED[activation](gate) * up
+    else:
+        h = _PLAIN[activation](h)
+    return h @ params["wo"]
+
+
+def mlp_flops(d_model: int, d_ff: int, activation: str, n_tokens: int) -> float:
+    width = 2 * d_ff if activation in _GATED else d_ff
+    return 2.0 * n_tokens * d_model * (width + d_ff)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                  b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal temporal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is tiny (4): unrolled taps, no conv primitive
+        out = out + pad[:, k:k + x.shape[1], :] * w[k]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv1d_step(conv_state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+                b: jnp.ndarray | None = None):
+    """Single decode step of causal_conv1d.
+
+    conv_state: (B, K-1, C) past inputs; x_t: (B, C). Returns (y_t, new_state).
+    """
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :]
+
+
+def chunked_cross_entropy(x: jnp.ndarray, head: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int,
+                          cap: float | None = None) -> jnp.ndarray:
+    """Token CE without materializing the (B, S, V) logits: lax.scan over
+    vocab chunks with an online logsumexp (beyond-paper memory
+    optimization; see EXPERIMENTS.md section Perf)."""
+    V = head.shape[1]
+    if V % chunk:
+        chunk = V
+    n_chunks = V // chunk
+    hc = head.reshape(head.shape[0], n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m, l, gold = carry
+        h_c, c_idx = inp
+        logits = (x @ h_c).astype(jnp.float32)       # (B, S, chunk)
+        logits = softcap(logits, cap)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l_new = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        local = labels - c_idx * chunk
+        valid = (local >= 0) & (local < chunk)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk - 1)[..., None],
+            axis=-1)[..., 0]
+        gold_new = jnp.where(valid, picked, gold)
+        return (m_new, l_new, gold_new), None
+
+    B, S = labels.shape
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    g0 = jnp.zeros((B, S), jnp.float32)
+    (m, l, gold), _ = jax.lax.scan(body, (m0, l0, g0),
+                                   (hc, jnp.arange(n_chunks)))
+    nll = m + jnp.log(l) - gold
+    return jnp.mean(nll)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy; logits promoted to f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

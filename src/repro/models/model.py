@@ -1,0 +1,95 @@
+"""The public Model bundle + input_specs for every (arch x shape) pair."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import decode as decode_lib
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., jnp.ndarray]          # (params, batch)
+    forward: Callable[..., tuple]                # (params, batch) -> logits
+    init_cache: Callable[..., Any]               # (batch, cache_len, long)
+    decode_step: Callable[..., tuple]            # (params, cache, tokens)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(
+        config=cfg,
+        init=partial(tfm.init_params, cfg=cfg),
+        loss_fn=partial(tfm.loss_fn, cfg=cfg),
+        forward=partial(tfm.forward, cfg=cfg),
+        init_cache=partial(decode_lib.init_cache, cfg),
+        decode_step=partial(decode_lib.decode_step, cfg=cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape,
+                with_labels: bool) -> dict:
+    """Specs of the data batch for train/prefill modes."""
+    B, S = shape.global_batch, shape.seq_len
+    dtype = cfg.dtype
+    specs = {}
+    if cfg.n_enc_layers:                     # enc-dec (whisper)
+        specs["enc_embeds"] = _sds((B, cfg.n_enc_tokens, cfg.d_model), dtype)
+        specs["tokens"] = _sds((B, S), "int32")
+    elif cfg.frontend == "vision":
+        n_front = cfg.n_frontend_tokens
+        specs["patch_embeds"] = _sds((B, n_front, cfg.d_model), dtype)
+        specs["tokens"] = _sds((B, S - n_front), "int32")
+    else:
+        specs["tokens"] = _sds((B, S), "int32")
+    if with_labels:
+        label_len = specs["tokens"].shape[1]
+        specs["labels"] = _sds((B, label_len), "int32")
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> Any:
+    long_ctx = shape.name == "long_500k"
+    return jax.eval_shape(
+        lambda: decode_lib.init_cache(cfg, shape.global_batch,
+                                      shape.seq_len, long_ctx))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """All inputs of the step lowered for this shape (params excluded)."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    # decode
+    return {
+        "cache": cache_specs(cfg, shape),
+        "tokens": _sds((shape.global_batch,), "int32"),
+    }
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable; (False, reason) records the skip."""
+    if shape.name == "long_500k" and not cfg.supports_long_ctx:
+        return False, ("pure full-attention architecture: long_500k "
+                       "requires sub-quadratic attention (DESIGN.md skip)")
+    return True, ""

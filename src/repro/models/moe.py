@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer (qwen2-moe: 60 routed top-4 + 4 shared;
+grok-1: 8 routed top-2).
+
+Dispatch is sort-free scatter/gather with a capacity buffer:
+
+    token -> top_k experts -> rank-within-expert -> (E, C+1, d) buffer
+    (overflow rides in the spill slot C and is dropped)
+
+This avoids the (T, E, C) one-hot dispatch tensor entirely (O(T k) scatter
+instead), which is what makes grok-scale MoE lowerable at 1M tokens.
+Experts are sharded over the ``model`` mesh axis (expert parallelism); the
+scatter/gather lowers to all-to-all style collectives under GSPMD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp, mlp
+
+
+def init_moe(key, cfg, dtype):
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    s = cfg.d_model ** -0.5
+    params = {
+        "router": (s * jax.random.normal(
+            k_router, (cfg.d_model, cfg.n_experts))).astype(jnp.float32),
+        "experts": jax.vmap(
+            lambda k: init_mlp(k, cfg.d_model, cfg.moe_d_ff,
+                               cfg.activation, dtype)
+        )(jax.random.split(k_experts, cfg.n_experts)),
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = init_mlp(
+            k_shared, cfg.d_model, cfg.n_shared_experts * cfg.moe_d_ff,
+            cfg.activation, dtype)
+    return params
+
+
+def moe_ffn_grouped(params, x, cfg):
+    """Per-batch-row dispatch (cfg.moe_grouped): every scatter/gather is
+    vmapped over the batch row, so the row dim is a pass-through scatter
+    dimension and GSPMD shards the whole MoE path over 'data' without the
+    involuntary full rematerialization the flat dispatch triggers.
+    Capacity is enforced per row (C_row = cf * S * k / E), as in MaxText.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x.reshape(B * S, d).astype(jnp.float32)
+              @ params["router"]).reshape(B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_idx, E), axis=2)
+                  .reshape(-1, E), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    capacity = int(cfg.capacity_factor * S * K / E) + 1
+
+    def row_dispatch(x_row, eidx_row, gate_row):
+        fe = eidx_row.reshape(-1)                              # (S*K,)
+        ft = jnp.repeat(jnp.arange(S), K)
+        fg = gate_row.reshape(-1)
+        order = jnp.argsort(fe, stable=True)
+        se = fe[order]
+        starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+        rank_sorted = jnp.arange(S * K) - starts[se]
+        rank = jnp.zeros(S * K, jnp.int32).at[order].set(
+            rank_sorted.astype(jnp.int32))
+        slot = jnp.minimum(rank, capacity)
+        buf = jnp.zeros((E, capacity + 1, d), x_row.dtype)
+        buf = buf.at[fe, slot].add(x_row[ft])
+        return buf, (fe, ft, fg, rank, slot)
+
+    buf, meta = jax.vmap(row_dispatch)(x, expert_idx, gate_vals)
+
+    # keep (E, B, C, d) -- merging B into C would destroy the 'data'
+    # sharding of the batch dim (EXPERIMENTS.md Perf, grok iteration 4)
+    h = buf[:, :, :capacity].transpose(1, 0, 2, 3)             # (E,B,C,d)
+    out = jax.vmap(lambda p, hh: mlp(p, hh, cfg.activation))(
+        params["experts"], h)
+    out = out.transpose(1, 0, 2, 3)                            # (B,E,C,d)
+    out = jnp.concatenate(
+        [out, jnp.zeros((B, E, 1, d), out.dtype)], axis=2)
+    if cfg.shard_residual:
+        # keep the combine-gather operand batch-sharded / d-replicated,
+        # else the expert wo FSDP d-sharding forces a full remat of the
+        # data-dependent gather (grok iteration 6)
+        from jax.sharding import PartitionSpec as Pspec
+        tok_axes = tuple(cfg.activation_batch_axes) or None
+        out = jax.lax.with_sharding_constraint(
+            out, Pspec(tok_axes, None, None, None))
+
+    def row_combine(out_row, m):
+        fe, ft, fg, rank, slot = m
+        gathered = out_row[fe, slot]
+        dropped = (rank >= capacity)[:, None]
+        contrib = jnp.where(dropped, 0.0, fg[:, None]) * gathered
+        return jnp.zeros((S, d), out_row.dtype).at[ft].add(
+            contrib.astype(out_row.dtype))
+
+    y = jax.vmap(row_combine)(out, meta)
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x, cfg.activation)
+    return y, aux
+
+
+def moe_ffn(params, x, cfg):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    if cfg.moe_grouped and x.shape[1] > 1:
+        return moe_ffn_grouped(params, x, cfg)
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- load-balancing auxiliary loss (Switch-style) -------------------
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity-buffer dispatch ----------------------------------------
+    capacity = int(cfg.capacity_factor * T * K / E) + 1
+    flat_expert = expert_idx.reshape(-1)                       # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+
+    # rank of each (token, k) within its expert, by sorted order
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    # start offset of each expert within the sorted list
+    starts = jnp.searchsorted(sorted_expert, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * K) - starts[sorted_expert]
+    rank = jnp.zeros(T * K, jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    slot = jnp.minimum(rank, capacity)                         # spill -> C
+
+    buf = jnp.zeros((E, capacity + 1, d), x.dtype)
+    buf = buf.at[flat_expert, slot].add(xt[flat_token])
+    if cfg.moe_buffer_shard:
+        # shard the capacity buffers along tokens-in-expert over the free
+        # batch axes (E itself is often not divisible by the model axis,
+        # e.g. grok's 8 experts on a 16-way axis) -- gives the expert
+        # matmul its second sharding dim (tokens x ff) and prevents GSPMD
+        # involuntary full rematerialization of the (E, C, ff) hidden.
+        from jax.sharding import PartitionSpec as Pspec
+        tok_axes = tuple(cfg.activation_batch_axes)
+        if tok_axes:
+            buf = jax.lax.with_sharding_constraint(
+                buf, Pspec(None, tok_axes, None))
+
+    # --- expert compute (vmapped over E; sharded over 'model') ----------
+    out_buf = jax.vmap(lambda p, h: mlp(p, h, cfg.activation))(
+        params["experts"], buf[:, :capacity])
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((E, 1, d), out_buf.dtype)], axis=1)
+
+    # --- combine -----------------------------------------------------------
+    gathered = out_buf[flat_expert, slot]                      # (T*K, d)
+    dropped = (rank >= capacity)[:, None]
+    contrib = jnp.where(dropped, 0.0, flat_gate[:, None]) * gathered
+    out = jnp.zeros((T, d), x.dtype).at[flat_token].add(
+        contrib.astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        out = out + mlp(params["shared"], xt, cfg.activation)
+
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)          (recurrence gate)
+    i_t = sigmoid(W_x x_t)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . x_t)
+
+wrapped in the Griffin recurrent block:
+
+    branch1 = conv1d(W_1 x) -> RG-LRU
+    branch2 = gelu(W_2 x)
+    out     = W_o (branch1 . branch2)
+
+Sequence mixing reuses the chunked diagonal scan from ssm.py (state dim =
+lru_width, no extra d_state factor).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, conv1d_step
+from repro.models.ssm import ssm_scan_chunked
+
+_C = 8.0  # Griffin's constant
+
+
+def init_rglru_block(key, cfg, dtype):
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    sw = w ** -0.5
+    return {
+        "w_branch1": (s * jax.random.normal(ks[0], (d, w))).astype(dtype),
+        "w_branch2": (s * jax.random.normal(ks[1], (d, w))).astype(dtype),
+        "conv_w": (0.5 * jax.random.normal(
+            ks[2], (cfg.conv_width, w))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": (sw * jax.random.normal(ks[3], (w, w))).astype(dtype),
+        "w_x": (sw * jax.random.normal(ks[4], (w, w))).astype(dtype),
+        # Lambda init so that a ~ Uniform(0.9, 0.999)^c at r=1 (Griffin A.2)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": (sw * jax.random.normal(ks[5], (w, d))).astype(dtype),
+    }
+
+
+def _gates(params, u):
+    """u: (..., w) -> (a, gated_input) in fp32."""
+    r = jax.nn.sigmoid((u @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_x"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_forward(params, x, cfg, chunk: int = 256):
+    """Full-sequence Griffin recurrent block. x: (B, S, d)."""
+    u = x @ params["w_branch1"]                                 # (B,S,w)
+    u = causal_conv1d(u, params["conv_w"], params["conv_b"])
+    a, bx = _gates(params, u)
+    B, S, w = a.shape
+    h0 = jnp.zeros((B, w), jnp.float32)
+    # reuse the chunked diagonal scan with a trailing singleton state dim
+    h_all, _ = ssm_scan_chunked(a[..., None], bx[..., None], h0[..., None],
+                                chunk)
+    h = h_all[..., 0].astype(x.dtype)                           # (B,S,w)
+    gate = jax.nn.gelu(x @ params["w_branch2"])
+    return (h * gate) @ params["w_out"]
+
+
+def init_rglru_cache(batch, cfg, dtype):
+    w = cfg.resolved_lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_step(params, x_t, cache, cfg):
+    """One decode step. x_t: (B, d)."""
+    u = x_t @ params["w_branch1"]
+    u, conv_state = conv1d_step(cache["conv"], u, params["conv_w"],
+                                params["conv_b"])
+    a, bx = _gates(params, u)
+    h = a * cache["h"] + bx
+    gate = jax.nn.gelu(x_t @ params["w_branch2"])
+    out = (h.astype(x_t.dtype) * gate) @ params["w_out"]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,197 @@
+"""Mamba-1 selective SSM block (falcon-mamba).
+
+Diagonal selective state space:
+
+    dt_t  = softplus(dt_proj(x_proj_dt(u_t)))                (B, S, d_in)
+    B_t,C_t = x_proj(u_t)                                    (B, S, n)
+    A     = -exp(A_log)                                      (d_in, n)
+    h_t   = exp(dt_t A) h_{t-1} + dt_t B_t u_t
+    y_t   = <h_t, C_t> + D u_t
+
+Sequence mixing runs as a *chunked* scan: within a chunk, an associative
+scan in VMEM-sized pieces; across chunks, a sequential lax.scan carry.
+This bounds the materialized state to (B, Q, d_in, n) per chunk instead of
+(B, S, d_in, n) — the TPU-native adaptation of the CUDA selective-scan
+kernel (see also kernels/lru_scan for the Pallas version of the same
+chunking idea).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, conv1d_step
+
+
+def init_mamba(key, cfg, dtype):
+    d, d_in, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = cfg.resolved_dt_rank
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    si = d_in ** -0.5
+    return {
+        "in_proj": (s * jax.random.normal(ks[0], (d, 2 * d_in))).astype(dtype),
+        "conv_w": (0.5 * jax.random.normal(
+            ks[1], (cfg.conv_width, d_in))).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": (si * jax.random.normal(
+            ks[2], (d_in, dt_rank + 2 * n))).astype(dtype),
+        "dt_proj": (dt_rank ** -0.5 * jax.random.normal(
+            ks[3], (dt_rank, d_in))).astype(dtype),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(1e-3, 0.1, d_in)) - 1.0).astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (si * jax.random.normal(ks[6], (d_in, d))).astype(dtype),
+    }
+
+
+def _ssm_coeffs(params, u):
+    """u: (B, S, d_in) post-conv activations -> (a, bx, C) scan coeffs."""
+    n = params["A_log"].shape[1]
+    dt_rank = params["dt_proj"].shape[0]
+    proj = u @ params["x_proj"]                                # (B,S,r+2n)
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                                   # (B,S,d_in)
+    A = -jnp.exp(params["A_log"])                              # (d_in, n)
+    a = jnp.exp(dt[..., None] * A)                             # (B,S,d_in,n)
+    bx = (dt * u.astype(jnp.float32))[..., None] * \
+        Bc.astype(jnp.float32)[..., None, :]                   # (B,S,d_in,n)
+    return a, bx, Cc.astype(jnp.float32)
+
+
+def ssm_scan_chunked(a, bx, h0, chunk: int = 128):
+    """Sequence scan of h_t = a_t h_{t-1} + bx_t, chunked over time.
+
+    a, bx: (B, S, d_in, n); h0: (B, d_in, n).  Returns (h_all (B,S,d_in,n),
+    h_last).  Within-chunk: associative scan; across chunks: lax.scan.
+    """
+    B, S, d_in, n = a.shape
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    a_c = a.reshape(B, nc, chunk, d_in, n).transpose(1, 0, 2, 3, 4)
+    b_c = bx.reshape(B, nc, chunk, d_in, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_body(h, inp):
+        a_i, b_i = inp                                         # (B,chunk,...)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a_i, b_i), axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(chunk_body, h0, (a_c, b_c))
+    h_all = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, d_in, n)
+    return h_all, h_last
+
+
+def ssm_mix_seq(params, u, scan_dtype) -> jnp.ndarray:
+    """Sequential time scan with the C-contraction folded into the step,
+    so the (B, S, d_in, n) state NEVER materializes: per step we read
+    (a_t, b_t), update h in place, and emit y_t = <h, C_t> of size
+    (B, d_in).  This is the XLA stand-in for the lru_scan Pallas kernel's
+    VMEM-resident chunked scan (identical HBM traffic: one read of the
+    coefficients + one running state)."""
+    a, bx, Cc = _ssm_coeffs(params, u)
+    a = a.astype(scan_dtype)
+    bx = bx.astype(scan_dtype)
+
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t.astype(jnp.float32) * h + b_t.astype(jnp.float32)
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    B_, S, d_in, n = a.shape
+    h0 = jnp.zeros((B_, d_in, n), jnp.float32)
+    _, y = jax.lax.scan(
+        step, h0,
+        (a.transpose(1, 0, 2, 3), bx.transpose(1, 0, 2, 3),
+         Cc.transpose(1, 0, 2)))
+    y = y.transpose(1, 0, 2)
+    return y + params["D"] * u.astype(jnp.float32)
+
+
+def ssm_mix_fused(params, u, chunk: int, scan_dtype) -> jnp.ndarray:
+    """Optimized sequence mixing: coefficients computed AND the C
+    contraction applied inside the chunk body, so only (B, S, d_in)
+    tensors cross scan boundaries (the (B, S, d_in, n) state never
+    materializes at full sequence length).  Optionally runs the scan in
+    bf16 with an fp32 cross-chunk carry.  See EXPERIMENTS.md section Perf
+    (falcon-mamba iteration log)."""
+    B_, S, d_in = u.shape
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+    u_c = u.reshape(B_, nc, chunk, d_in).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_body(h, u_i):
+        a, bx, Cc = _ssm_coeffs(params, u_i)
+        a = a.astype(scan_dtype)
+        bx = bx.astype(scan_dtype)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h_all = (a_cum.astype(jnp.float32) * h[:, None]
+                 + b_cum.astype(jnp.float32))
+        y_i = jnp.einsum("bsdn,bsn->bsd", h_all, Cc)
+        y_i = y_i + params["D"] * u_i.astype(jnp.float32)
+        return h_all[:, -1], y_i
+
+    h0 = jnp.zeros((B_, d_in, params["A_log"].shape[1]), jnp.float32)
+    _, y_chunks = jax.lax.scan(chunk_body, h0, u_c)
+    return y_chunks.transpose(1, 0, 2, 3).reshape(B_, S, d_in)
+
+
+def mamba_forward(params, x, cfg, chunk: int | None = None):
+    """Full-sequence mamba block. x: (B, S, d) -> (B, S, d)."""
+    chunk = chunk or cfg.ssm_chunk
+    u, z = jnp.split(x @ params["in_proj"], 2, axis=-1)        # (B,S,d_in)
+    u = causal_conv1d(u, params["conv_w"], params["conv_b"])
+    u = jax.nn.silu(u)
+    if cfg.ssm_fused_output and cfg.ssm_inner == "seq":
+        y = ssm_mix_seq(params, u, jnp.dtype(cfg.ssm_scan_dtype))
+    elif cfg.ssm_fused_output:
+        y = ssm_mix_fused(params, u, chunk,
+                          jnp.dtype(cfg.ssm_scan_dtype))
+    else:
+        a, bx, Cc = _ssm_coeffs(params, u)
+        B_, S, d_in, n = a.shape
+        h0 = jnp.zeros((B_, d_in, n), jnp.float32)
+        h_all, _ = ssm_scan_chunked(a, bx, h0, chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc)
+        y = y + params["D"] * u.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba_cache(batch, cfg, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_step(params, x_t, cache, cfg):
+    """One decode step. x_t: (B, d) -> (y (B, d), new_cache)."""
+    u, z = jnp.split(x_t @ params["in_proj"], 2, axis=-1)      # (B, d_in)
+    u, conv_state = conv1d_step(cache["conv"], u, params["conv_w"],
+                                params["conv_b"])
+    u = jax.nn.silu(u)
+    a, bx, Cc = _ssm_coeffs(params, u[:, None, :])
+    h = a[:, 0] * cache["h"] + bx[:, 0]                        # (B,d_in,n)
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])
+    y = y + params["D"] * u.astype(jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], {"conv": conv_state, "h": h}

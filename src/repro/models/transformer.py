@@ -1,0 +1,266 @@
+"""Stage-based transformer assembly for all 10 architectures.
+
+A model is a list of *stages*; each stage is a repeating unit of layer
+kinds (e.g. gemma3's ``('local',)*5 + ('global',)``) scanned ``n_units``
+times with stacked parameters.  Heterogeneous patterns therefore compile
+to O(len(pattern)) HLO regardless of depth (nemotron's 96 layers lower as
+one scanned unit), which keeps CPU dry-run compiles tractable and is the
+production pattern for TPU (same as MaxText).
+
+Layer kinds:
+  'global' -- full (causal) attention + FFN/MoE
+  'local'  -- sliding-window attention + FFN/MoE
+  'ssm'    -- mamba-1 block (no separate FFN)
+  'rec'    -- RG-LRU block + FFN
+  'enc'    -- non-causal attention + FFN (whisper encoder)
+  'xdec'   -- causal self-attn + cross-attn + FFN (whisper decoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (apply_rope, cross_entropy, init_mlp, mlp,
+                                 rms_norm, softcap)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Stage structure
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    unit: tuple            # layer kinds within the repeating unit
+    n_units: int
+    cross: bool = False    # decoder-with-cross-attention stage
+
+
+def build_stages(cfg: ModelConfig) -> list[Stage]:
+    stages = []
+    if cfg.n_enc_layers:
+        stages.append(Stage(unit=("enc",), n_units=cfg.n_enc_layers))
+        stages.append(Stage(unit=("xdec",), n_units=cfg.n_layers,
+                            cross=True))
+        return stages
+    unit = tuple(cfg.pattern)
+    n_full, rem = divmod(cfg.n_layers, len(unit))
+    if n_full:
+        stages.append(Stage(unit=unit, n_units=n_full))
+    if rem:
+        stages.append(Stage(unit=unit[:rem], n_units=1))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, kind: str, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    p = {"ln1": jnp.zeros((d,), dtype)}
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        p["mamba"] = ssm_lib.init_mamba(ks[0], cfg, dtype)
+        return p
+    if kind == "rec":
+        p["rec"] = rglru_lib.init_rglru_block(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn_lib.init_attn(ks[0], d, cfg.n_heads,
+                                       cfg.n_kv_heads,
+                                       cfg.resolved_head_dim, dtype)
+        if kind == "xdec":
+            p["ln_x"] = jnp.zeros((d,), dtype)
+            p["xattn"] = attn_lib.init_attn(ks[1], d, cfg.n_heads,
+                                            cfg.n_kv_heads,
+                                            cfg.resolved_head_dim, dtype)
+    p["ln2"] = jnp.zeros((d,), dtype)
+    if cfg.n_experts and kind in ("global", "local"):
+        p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], d, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    stages = build_stages(cfg)
+    keys = jax.random.split(key, len(stages) + 2)
+    params: dict = {"stages": []}
+    for stage, k in zip(stages, keys[:-2]):
+        def unit_init(kk):
+            uks = jax.random.split(kk, len(stage.unit))
+            return {str(i): _init_layer(uk, kind, cfg, dtype)
+                    for i, (kind, uk) in enumerate(zip(stage.unit, uks))}
+
+        params["stages"].append(
+            jax.vmap(unit_init)(jax.random.split(k, stage.n_units)))
+    params["embed"] = (cfg.d_model ** -0.5 * jax.random.normal(
+        keys[-2], (cfg.vocab, cfg.d_model))).astype(dtype)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (cfg.d_model ** -0.5 * jax.random.normal(
+            keys[-1], (cfg.d_model, cfg.vocab))).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attention_full(p, x, kind, cfg: ModelConfig, positions, enc_out=None):
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = attn_lib.qkv(p, x, n_heads=H, n_kv_heads=Hkv, head_dim=D)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_seq_shard:
+        # sequence-parallel attention (beyond-paper, EXPERIMENTS.md Perf):
+        # shard queries over 'model' along S, replicate the (small GQA)
+        # kv along 'model' -- kills the per-chunk partial-sum all-reduces
+        # GSPMD inserts when n_kv_heads < |model| (e.g. phi4: 8 kv heads
+        # on a 16-way axis).
+        from jax.sharding import PartitionSpec as Pspec
+        wsc = jax.lax.with_sharding_constraint
+        b_ax = tuple(cfg.activation_batch_axes) or None
+        q = wsc(q, Pspec(b_ax, "model", None, None))
+        k = wsc(k, Pspec(b_ax, None, None, None))
+        v = wsc(v, Pspec(b_ax, None, None, None))
+    if kind == "local":
+        o = attn_lib.attn_block_local(q, k, v, window=cfg.window,
+                                      cap=cfg.attn_softcap)
+    elif kind == "enc":
+        o = attn_lib.attn_chunked(q, k, v, causal=False,
+                                  cap=cfg.attn_softcap,
+                                  chunk=cfg.attn_chunk)
+    else:
+        o = attn_lib.attn_chunked(q, k, v, causal=cfg.causal,
+                                  cap=cfg.attn_softcap,
+                                  chunk=cfg.attn_chunk)
+    return o @ p["wo"]
+
+
+def _cross_attention_full(p, x, enc_out, cfg: ModelConfig):
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, S, _ = x.shape
+    T = enc_out.shape[1]
+    q = (x @ p["wq"]).reshape(B, S, H, D)
+    k = (enc_out @ p["wk"]).reshape(B, T, Hkv, D)
+    v = (enc_out @ p["wv"]).reshape(B, T, Hkv, D)
+    o = attn_lib.attn_chunked(q, k, v, causal=False, cap=cfg.attn_softcap)
+    return o @ p["wo"]
+
+
+def _constrain_residual(x, cfg):
+    if not cfg.shard_residual:
+        return x
+    from jax.sharding import PartitionSpec as Pspec
+    b_ax = tuple(cfg.activation_batch_axes) or None
+    return jax.lax.with_sharding_constraint(
+        x, Pspec(b_ax, *([None] * (x.ndim - 1))))
+
+
+def _layer_forward(p, x, kind, cfg, positions, aux, enc_out=None):
+    eps = cfg.norm_eps
+    x = _constrain_residual(x, cfg)
+    if kind == "ssm":
+        return x + ssm_lib.mamba_forward(
+            p["mamba"], rms_norm(x, p["ln1"], eps), cfg), aux
+    if kind == "rec":
+        x = x + rglru_lib.rglru_forward(
+            p["rec"], rms_norm(x, p["ln1"], eps), cfg)
+    else:
+        x = x + _attention_full(p["attn"], rms_norm(x, p["ln1"], eps),
+                                kind, cfg, positions)
+        if kind == "xdec":
+            x = x + _cross_attention_full(
+                p["xattn"], rms_norm(x, p["ln_x"], eps), enc_out, cfg)
+    h = rms_norm(x, p["ln2"], eps)
+    if "moe" in p:
+        out, a = moe_lib.moe_ffn(p["moe"], h, cfg)
+        return x + out, aux + a
+    return x + mlp(p["mlp"], h, cfg.activation), aux
+
+
+def _stage_forward(stage_params, stage: Stage, x, cfg, positions,
+                   aux, enc_out=None, remat=False):
+    def unit_body(carry, unit_params):
+        x, aux = carry
+        for i, kind in enumerate(stage.unit):
+            x, aux = _layer_forward(unit_params[str(i)], x, kind, cfg,
+                                    positions, aux, enc_out)
+        return (x, aux), None
+
+    body = jax.checkpoint(unit_body) if remat else unit_body
+    (x, aux), _ = jax.lax.scan(body, (x, aux), stage_params)
+    return x, aux
+
+
+def forward_hidden(params, cfg: ModelConfig, batch: dict, remat=False):
+    """Full-sequence forward up to the final norm -> (hidden, aux_loss).
+
+    batch keys: 'tokens' (B, S_text); optional 'patch_embeds'
+    (B, n_front, d) for VLM/audio-prepend; optional 'enc_embeds'
+    (B, n_enc_tokens, d) for enc-dec.
+    """
+    stages = build_stages(cfg)
+    scale = jnp.asarray(cfg.d_model ** 0.5, params["embed"].dtype)
+    x = params["embed"][batch["tokens"]] * scale
+    if cfg.frontend and cfg.frontend != "audio":
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+
+    enc_out = None
+    stage_idx = 0
+    if cfg.n_enc_layers:
+        enc_x = batch["enc_embeds"].astype(x.dtype)
+        enc_pos = jnp.arange(enc_x.shape[1])
+        enc_out, aux = _stage_forward(params["stages"][0], stages[0],
+                                      enc_x, cfg, enc_pos, aux, remat=remat)
+        enc_out = rms_norm(enc_out, jnp.zeros_like(enc_out[0, 0]),
+                           cfg.norm_eps)
+        stage_idx = 1
+
+    for sp, stage in zip(params["stages"][stage_idx:], stages[stage_idx:]):
+        x, aux = _stage_forward(sp, stage, x, cfg, positions, aux,
+                                enc_out, remat=remat)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _head(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, cfg: ModelConfig, batch: dict, remat=False):
+    """Full-sequence forward -> (logits, aux_loss)."""
+    x, aux = forward_hidden(params, cfg, batch, remat=remat)
+    logits = softcap(x @ _head(params, cfg), cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat=False):
+    x, aux = forward_hidden(params, cfg, batch, remat=remat)
+    if cfg.frontend and cfg.frontend != "audio":
+        x = x[:, batch["patch_embeds"].shape[1]:, :]
+    if cfg.chunked_loss:
+        from repro.models.layers import chunked_cross_entropy
+        loss = chunked_cross_entropy(x, _head(params, cfg),
+                                     batch["labels"], cfg.chunked_loss,
+                                     cap=cfg.final_softcap)
+    else:
+        logits = softcap(x @ _head(params, cfg), cfg.final_softcap)
+        loss = cross_entropy(logits, batch["labels"])
+    return loss + cfg.router_aux_weight * aux

@@ -1,0 +1,3 @@
+"""Optimizers for standard (non-federated) training mode."""
+
+from repro.optim.optimizers import sgd, momentum, adamw, apply_updates  # noqa: F401

@@ -1,0 +1,79 @@
+"""Minimal optimizer library (standard, non-federated training mode).
+
+Optax-style triples: ``init(params) -> state``, ``update(grads, state,
+params) -> (updates, state)``, plus ``apply_updates``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree_util.tree_map(
+            lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, m, params=None):
+        m = jax.tree_util.tree_map(
+            lambda mm, g: beta * mm + g.astype(jnp.float32), m, grads)
+        return jax.tree_util.tree_map(lambda mm: -lr * mm, m), m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    class State(NamedTuple):
+        mu: Any
+        nu: Any
+        t: jnp.ndarray
+
+    def init(params):
+        z = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return State(mu=z(), nu=z(), t=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        t = state.t + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(
+                g.astype(jnp.float32)), state.nu, grads)
+        mu_hat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), mu)
+        nu_hat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), nu)
+        upd = jax.tree_util.tree_map(
+            lambda m, v, p: -lr * (m / (jnp.sqrt(v) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mu_hat, nu_hat, params)
+        return upd, State(mu=mu, nu=nu, t=t)
+
+    return Optimizer(init, update)

@@ -1,0 +1,78 @@
+"""All baseline algorithms behave as published on the paper's problem."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.metrics import hitting_round
+from repro.core.problem import make_logreg_problem
+
+KEY = jax.random.PRNGKey(1)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return make_logreg_problem(n_agents=20, q=50, dim=5, seed=0)
+
+
+EXACT = {
+    "fedpd": dict(eta=1.0, gamma=0.1, n_epochs=5),
+    "fedlin": dict(gamma=0.1, n_epochs=5),
+    "scaffold": dict(gamma_l=0.1, n_epochs=5),
+    "led": dict(gamma=0.1, n_epochs=5),
+    "5gcs": dict(alpha=1.0, eta=1.0, n_epochs=5, participation=1.0),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXACT))
+def test_exact_methods_converge(prob, name):
+    algo = baselines.REGISTRY[name](prob, **EXACT[name])
+    crit = np.asarray(algo.run(KEY, 400))
+    assert crit[-1] < 1e-8, f"{name} final={crit[-1]}"
+
+
+@pytest.mark.parametrize("name,kw,steps", [
+    ("proxskip", dict(gamma=0.2, p_comm=0.2), 800),
+    ("tamuna", dict(gamma=0.2, p_comm=0.2, participation=1.0), 800),
+])
+def test_probabilistic_lt_methods_converge(prob, name, kw, steps):
+    algo = baselines.REGISTRY[name](prob, **kw)
+    crit = np.asarray(algo.run(KEY, steps))
+    assert crit[-1] < 1e-7, f"{name} final={crit[-1]}"
+
+
+def test_fedavg_exhibits_client_drift(prob):
+    """FedAvg with local training stalls above the exact threshold --
+    the client-drift phenomenon motivating the paper (Sec. I)."""
+    algo = baselines.REGISTRY["fedavg"](prob, gamma=0.1, n_epochs=5)
+    crit = np.asarray(algo.run(KEY, 400))
+    assert crit[-1] > 1e-4
+
+
+def test_fedsplit_biased_under_inexact_prox(prob):
+    """FedSplit (no warm start) stalls when the prox is solved inexactly
+    -- the gap Fed-PLT's initialization closes (Sec. I-A)."""
+    algo = baselines.REGISTRY["fedsplit"](prob, rho=1.0, n_epochs=5)
+    crit = np.asarray(algo.run(KEY, 400))
+    assert crit[-1] > 1e-6
+
+
+def test_partial_participation_scaffold_5gcs(prob):
+    for name, kw in [("scaffold", dict(gamma_l=0.1, n_epochs=5,
+                                       participation=0.5)),
+                     ("5gcs", dict(alpha=1.0, eta=1.0, n_epochs=5,
+                                   participation=0.5))]:
+        algo = baselines.REGISTRY[name](prob, **kw)
+        crit = np.asarray(algo.run(KEY, 800))
+        assert crit[-1] < 1e-6, f"{name} pp final={crit[-1]}"
+
+
+def test_time_model_table2():
+    """Per-round cost formulas match Table II."""
+    prob = make_logreg_problem(n_agents=10, q=20, dim=3)
+    tG, tC = 1.0, 10.0
+    fedlin = baselines.REGISTRY["fedlin"](prob, n_epochs=5)
+    fedpd = baselines.REGISTRY["fedpd"](prob, n_epochs=5)
+    assert fedlin.time_per_round(tG, tC) == ((5 + 1) * tG + 2 * tC) * 10
+    assert fedpd.time_per_round(tG, tC) == (5 * tG + tC) * 10

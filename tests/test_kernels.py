@@ -1,0 +1,138 @@
+"""Per-kernel allclose sweeps vs the ref.py pure-jnp oracles
+(interpret=True on CPU), plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fedplt_update.ops import fedplt_update, fedplt_update_tree
+from repro.kernels.fedplt_update.ref import fedplt_update_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.lru_scan.ops import lru_scan
+from repro.kernels.lru_scan.ref import lru_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# fedplt_update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(5,), (128,), (1000,), (77, 33),
+                                   (4, 256, 512), (3, 7, 11, 13)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fedplt_update_sweep(shape, dtype):
+    ks = jax.random.split(KEY, 4)
+    w, g, v, t = (jax.random.normal(k, shape, dtype) for k in ks)
+    for noise in (None, t):
+        out = fedplt_update(w, g, v, t=noise, gamma=0.07, inv_rho=1.3)
+        ref = fedplt_update_ref(w, g, v, t=noise, gamma=0.07, inv_rho=1.3)
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=tol)
+
+
+@given(st.integers(1, 2000), st.floats(1e-4, 1.0), st.floats(0.01, 10.0))
+@settings(max_examples=25, deadline=None)
+def test_fedplt_update_property(n, gamma, inv_rho):
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    w, g, v = (jax.random.normal(k, (n,)) for k in ks)
+    out = fedplt_update(w, g, v, gamma=gamma, inv_rho=inv_rho)
+    ref = fedplt_update_ref(w, g, v, gamma=gamma, inv_rho=inv_rho)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_fedplt_update_tree():
+    tree = {"a": jnp.ones((17, 5)), "b": {"c": jnp.full((300,), 2.0)}}
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    out = fedplt_update_tree(tree, zeros, zeros, gamma=0.1, inv_rho=2.0)
+    # w - 0.1*(0 + 2*(w-0)) = 0.8 w
+    np.testing.assert_allclose(out["a"], 0.8 * tree["a"], atol=1e-6)
+    np.testing.assert_allclose(out["b"]["c"], 0.8 * tree["b"]["c"],
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,Hkv,D", [(128, 4, 4, 32), (256, 4, 2, 64),
+                                       (256, 8, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, Hkv, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (2, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (2, S, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-3 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True, window=64),
+    dict(causal=True, cap=30.0),
+    dict(causal=False),
+    dict(causal=True, window=32, cap=50.0),
+])
+def test_flash_attention_variants(kwargs):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    out = flash_attention(q, k, v, **kwargs)
+    ref = flash_attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(out, ref, atol=2e-3)
+
+
+def test_flash_attention_block_sizes():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 32))
+    k = jax.random.normal(ks[1], (1, 256, 2, 32))
+    v = jax.random.normal(ks[2], (1, 256, 2, 32))
+    ref = flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+        np.testing.assert_allclose(out, ref, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# lru_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W", [(1, 128, 16), (2, 256, 32), (3, 64, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lru_scan_sweep(B, S, W, dtype):
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))).astype(dtype)
+    b = jax.random.normal(ks[1], (B, S, W), dtype)
+    out = lru_scan(a, b)
+    ref = lru_scan_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_lru_scan_4d_state():
+    ks = jax.random.split(KEY, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 128, 8, 4)))
+    b = jax.random.normal(ks[1], (2, 128, 8, 4))
+    np.testing.assert_allclose(lru_scan(a, b), lru_scan_ref(a, b),
+                               atol=1e-4)
+
+
+@given(st.integers(1, 6), st.integers(2, 5))
+@settings(max_examples=15, deadline=None)
+def test_lru_scan_chunk_invariance(b_seed, chunk_pow):
+    """Result is independent of the chunking (cross-chunk carry exact)."""
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(b_seed),
+                                         (1, 64, 8)))
+    b = jax.random.normal(jax.random.PRNGKey(b_seed + 99), (1, 64, 8))
+    out1 = lru_scan(a, b, chunk=2 ** chunk_pow)
+    out2 = lru_scan(a, b, chunk=64)
+    np.testing.assert_allclose(out1, out2, atol=1e-5)

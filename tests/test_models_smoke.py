@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests (REDUCED configs: 2 layers, d_model<=512,
+<=4 experts): one forward/train step + one decode step on CPU, asserting
+output shapes and no NaNs.  Full configs are exercised only via dryrun."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import frontends
+from repro.models.model import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32, with_labels=True):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(
+            jax.random.PRNGKey(7), (B, S), 0, cfg.vocab)
+    if cfg.n_enc_layers:
+        batch["enc_embeds"] = frontends.fake_audio_frames(KEY, cfg, B)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = frontends.fake_patch_embeds(KEY, cfg, B)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg)
+    logits, aux = model.forward(params, batch=batch)
+    S_total = 32 + (cfg.n_frontend_tokens if cfg.frontend == "vision"
+                    else 0)
+    assert logits.shape == (2, S_total, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch=batch))(params)
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(jnp.square(g)) for g in
+                jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B = 2
+    cache = model.init_cache(batch=B, cache_len=64)
+    toks = jnp.array([1, 2], jnp.int32)
+    step = jax.jit(lambda p, c, t: model.decode_step(p, cache=c, tokens=t))
+    for _ in range(3):
+        logits, cache = step(params, cache, toks)
+    assert logits.shape == (B, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert cache["pos"].shape == (B,)          # per-sequence positions
+    assert int(cache["pos"][0]) == 3
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).supports_long_ctx])
+def test_long_ctx_decode_path(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    cache = model.init_cache(batch=1, cache_len=128, long_ctx=True)
+    toks = jnp.array([5], jnp.int32)
+    logits, cache = model.decode_step(params, cache=cache, tokens=toks,
+                                      long_ctx=True)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "gemma2-2b",
+                                  "falcon-mamba-7b", "recurrentgemma-2b",
+                                  "gemma3-12b", "qwen2-moe-a2.7b",
+                                  "nemotron-4-340b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the parallel forward logits --
+    cross-validates caches (ring buffers, recurrent states) against the
+    chunked/block-local attention and scan paths."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        # capacity drops are a train-time-only semantic (decode never
+        # overflows); ample capacity makes the two paths comparable
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab, jnp.int32)
+    logits_par, _ = model.forward(params, batch={"tokens": toks})
+
+    cache = model.init_cache(batch=B, cache_len=S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache=cache,
+                                      tokens=toks[:, t])
+        outs.append(lg)
+    logits_seq = jnp.stack(outs, axis=1)
+    diff = jnp.max(jnp.abs(logits_par - logits_seq))
+    assert float(diff) < 2e-2, float(diff)
+
+
+def test_whisper_decode_matches_forward():
+    """Enc-dec path: decode with a filled cross-attention cache matches
+    the parallel encoder+decoder forward."""
+    from repro.models.decode import fill_cross_cache
+    from repro.models.transformer import (_stage_forward, build_stages)
+    from repro.models.layers import rms_norm
+
+    cfg = get_config("whisper-small").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 12
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab, jnp.int32)
+    enc = frontends.fake_audio_frames(KEY, cfg, B)
+    batch = {"tokens": toks, "enc_embeds": enc}
+    logits_par, _ = model.forward(params, batch=batch)
+
+    # run the encoder once (same computation forward() performs)
+    stages = build_stages(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    enc_pos = jnp.arange(enc.shape[1])
+    enc_out, _ = _stage_forward(params["stages"][0], stages[0],
+                                enc.astype(params["embed"].dtype), cfg,
+                                enc_pos, aux)
+    enc_out = rms_norm(enc_out, jnp.zeros_like(enc_out[0, 0]),
+                       cfg.norm_eps)
+
+    cache = model.init_cache(batch=B, cache_len=S)
+    cache = fill_cross_cache(params, cfg, cache, enc_out)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(params, cache=cache,
+                                      tokens=toks[:, t])
+        outs.append(lg)
+    diff = jnp.max(jnp.abs(logits_par - jnp.stack(outs, axis=1)))
+    assert float(diff) < 2e-2, float(diff)

@@ -1,0 +1,70 @@
+"""Privacy accountant: Prop. 4 bound shape, Lemma 5, calibration."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import privacy
+
+
+ARGS = dict(sensitivity=1.0, mu=0.5, tau=0.1, q=250, gamma=0.1)
+
+
+def test_eps_increases_with_rounds_but_bounded():
+    eps = [privacy.rdp_epsilon(2.0, K=k, n_epochs=5, **ARGS)
+           for k in (1, 10, 100, 10_000)]
+    assert all(a < b for a, b in zip(eps, eps[1:]))
+    ceiling = privacy.rdp_epsilon_limit(2.0, ARGS["sensitivity"],
+                                        ARGS["mu"], ARGS["tau"], ARGS["q"])
+    assert eps[-1] <= ceiling
+    assert eps[-1] > 0.99 * ceiling  # saturates at the constant bound
+
+
+def test_more_local_epochs_do_not_exceed_ceiling():
+    """The paper's headline: N_e can be chosen freely for communication
+    efficiency -- privacy stays under the same constant ceiling."""
+    ceiling = privacy.rdp_epsilon_limit(2.0, ARGS["sensitivity"],
+                                        ARGS["mu"], ARGS["tau"], ARGS["q"])
+    for ne in (1, 5, 50, 500):
+        eps = privacy.rdp_epsilon(2.0, K=1000, n_epochs=ne, **ARGS)
+        assert eps <= ceiling + 1e-12
+
+
+def test_eps_decreases_with_noise_and_data():
+    e_small_tau = privacy.rdp_epsilon(2.0, K=100, n_epochs=5, **ARGS)
+    e_big_tau = privacy.rdp_epsilon(
+        2.0, K=100, n_epochs=5, **{**ARGS, "tau": 1.0})
+    assert e_big_tau < e_small_tau
+    e_big_q = privacy.rdp_epsilon(
+        2.0, K=100, n_epochs=5, **{**ARGS, "q": 2500})
+    assert e_big_q < e_small_tau
+
+
+def test_rdp_to_adp_lemma5():
+    assert privacy.rdp_to_adp(1.0, 2.0, 1e-5) == pytest.approx(
+        1.0 + math.log(1e5), rel=1e-9)
+
+
+def test_adp_optimizes_over_order():
+    eps_fixed = privacy.rdp_to_adp(
+        privacy.rdp_epsilon(2.0, K=100, n_epochs=5, **ARGS), 2.0, 1e-5)
+    eps_best, lam = privacy.adp_epsilon(
+        ARGS["sensitivity"], ARGS["mu"], ARGS["tau"], ARGS["q"],
+        ARGS["gamma"], 100, 5, 1e-5)
+    assert eps_best <= eps_fixed
+    assert lam > 1.0
+
+
+@given(st.floats(0.5, 20.0))
+@settings(max_examples=20, deadline=None)
+def test_calibration_inverse(target_eps):
+    tau = privacy.calibrate_noise(target_eps, 1e-5, 1.0, 0.5, 250, 0.1,
+                                  100, 5)
+    eps, _ = privacy.adp_epsilon(1.0, 0.5, tau, 250, 0.1, 100, 5, 1e-5)
+    assert eps <= target_eps * 1.01
+
+
+def test_privacy_report():
+    rep = privacy.PrivacyReport.build(1.0, 0.5, 0.1, 250, 0.1, 100, 5)
+    assert rep.adp_eps > 0 and rep.eps_ceiling >= rep.adp_eps * 0.99

@@ -1,0 +1,96 @@
+"""Prox library: closed forms, Moreau identity, Lemma 6, nonexpansiveness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prox as P
+
+VECS = st.lists(st.floats(-10, 10), min_size=1, max_size=8)
+
+
+def test_prox_l1_soft_threshold():
+    y = jnp.array([3.0, -2.0, 0.5, 0.0])
+    out = P.prox_l1(y, 1.0)
+    np.testing.assert_allclose(out, [2.0, -1.0, 0.0, 0.0], atol=1e-7)
+
+
+def test_prox_l2sq_shrinks():
+    y = jnp.array([2.0, -4.0])
+    np.testing.assert_allclose(P.prox_l2sq(y, 1.0), y / 2.0, atol=1e-7)
+
+
+def test_prox_box_projects():
+    y = jnp.array([2.0, -4.0, 0.3])
+    np.testing.assert_allclose(P.prox_box(y, 0.7, -1, 1), [1, -1, 0.3],
+                               atol=1e-7)
+
+
+def test_prox_is_argmin():
+    """prox_l1 satisfies the exact optimality condition
+    (y - x)/rho in subdifferential of ||.||_1 at x."""
+    y = jnp.array([1.5, -0.7, 3.0, 0.2])
+    rho = 0.8
+    x = P.prox_l1(y, rho)
+    g = (y - x) / rho
+    for xi, gi in zip(np.asarray(x), np.asarray(g)):
+        if xi == 0.0:
+            assert abs(gi) <= 1.0 + 1e-6
+        else:
+            assert gi == pytest.approx(np.sign(xi), abs=1e-6)
+
+
+@given(VECS, VECS, st.floats(0.1, 10))
+@settings(max_examples=50, deadline=None)
+def test_prox_l1_nonexpansive(xs, ys, rho):
+    n = min(len(xs), len(ys))
+    x, y = jnp.array(xs[:n]), jnp.array(ys[:n])
+    d_out = float(jnp.linalg.norm(P.prox_l1(x, rho) - P.prox_l1(y, rho)))
+    d_in = float(jnp.linalg.norm(x - y))
+    assert d_out <= d_in + 1e-5
+
+
+@given(VECS, VECS, st.floats(0.1, 10))
+@settings(max_examples=50, deadline=None)
+def test_reflect_nonexpansive(xs, ys, rho):
+    n = min(len(xs), len(ys))
+    x, y = jnp.array(xs[:n]), jnp.array(ys[:n])
+    refl = P.reflect(P.prox_l1)
+    d_out = float(jnp.linalg.norm(refl(x, rho) - refl(y, rho)))
+    d_in = float(jnp.linalg.norm(x - y))
+    assert d_out <= d_in + 1e-5
+
+
+@given(VECS, st.floats(0.2, 5))
+@settings(max_examples=50, deadline=None)
+def test_moreau_conjugate_of_l1_is_linf_projection(xs, rho):
+    """f = ||.||_1  =>  f* = indicator of the l-inf ball, whose prox is
+    the projection clip(y, -1, 1) for ANY rho -- analytic check of the
+    Moreau-identity implementation."""
+    x = jnp.array(xs)
+    p_star = P.moreau_conjugate(P.prox_l1)(x, rho)
+    np.testing.assert_allclose(p_star, jnp.clip(x, -1.0, 1.0), atol=1e-5)
+
+
+def test_coordinator_prox_lemma6():
+    """prox_{rho g} for g = consensus + h equals broadcast of
+    prox_{rho h / N} at the average (Lemma 6)."""
+    z = jnp.array([[1.0, 2.0], [3.0, -1.0], [-2.0, 5.0]])
+    rho = 2.0
+    y = P.coordinator_prox(z, rho, P.prox_l1)
+    expect = P.prox_l1(jnp.mean(z, axis=0), rho / 3.0)
+    np.testing.assert_allclose(y, expect, atol=1e-7)
+
+
+def test_prox_of_smooth_matches_closed_form():
+    """Approximate prox of a quadratic matches (I + rho Q)^-1 (y - rho b)."""
+    Q = jnp.array([[2.0, 0.3], [0.3, 1.0]])
+    b = jnp.array([0.5, -1.0])
+    grad = lambda x: Q @ x + b
+    y = jnp.array([1.0, 1.0])
+    rho = 0.5
+    out = P.prox_of_smooth(grad, y, rho, steps=2000, smoothness=3.0)
+    expect = jnp.linalg.solve(jnp.eye(2) + rho * Q, y - rho * b)
+    np.testing.assert_allclose(out, expect, atol=1e-4)

@@ -1,0 +1,87 @@
+"""Serving layer: per-sequence cache positions, continuous batching
+isolation, slot reset."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.decode import reset_slots
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module", params=["gemma2-2b", "falcon-mamba-7b"])
+def setup(request):
+    cfg = get_config(request.param).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _decode_seq(model, params, toks, B_pad=1, lane=0, other_toks=None,
+                cache_len=32):
+    """Decode `toks` in lane `lane` of a B_pad-slot batch; other lanes
+    run `other_toks` (or idle)."""
+    B = B_pad
+    cache = model.init_cache(batch=B, cache_len=cache_len)
+    outs = []
+    for t in range(len(toks)):
+        batch_toks = np.zeros(B, np.int32)
+        batch_toks[lane] = toks[t]
+        if other_toks is not None:
+            for b in range(B):
+                if b != lane:
+                    batch_toks[b] = other_toks[(t + b) % len(other_toks)]
+        logits, cache = model.decode_step(
+            params, cache=cache, tokens=jnp.asarray(batch_toks))
+        outs.append(np.asarray(logits[lane]))
+    return np.stack(outs)
+
+
+def test_slot_isolation(setup):
+    """A sequence's logits are identical whether it runs alone or next to
+    unrelated sequences in other slots (continuous-batching invariant)."""
+    cfg, model, params = setup
+    toks = [3, 17, 5, 9, 11]
+    alone = _decode_seq(model, params, toks, B_pad=1, lane=0)
+    crowd = _decode_seq(model, params, toks, B_pad=3, lane=1,
+                        other_toks=[101, 55, 7, 42])
+    np.testing.assert_allclose(alone, crowd, atol=2e-3)
+
+
+def test_reset_slots_frees_state(setup):
+    """After reset_slots, the freed lane reproduces a fresh sequence."""
+    cfg, model, params = setup
+    B, cache_len = 2, 32
+    toks = [3, 17, 5]
+    # fresh run
+    fresh = _decode_seq(model, params, toks, B_pad=2, lane=0,
+                        cache_len=cache_len)
+    # dirty the cache in lane 0, then reset lane 0 only
+    cache = model.init_cache(batch=B, cache_len=cache_len)
+    for t in [9, 8, 7, 6]:
+        _, cache = model.decode_step(
+            params, cache=cache, tokens=jnp.asarray([t, t + 1]))
+    cache = reset_slots(cache, jnp.asarray([True, False]))
+    outs = []
+    for t in range(len(toks)):
+        logits, cache = model.decode_step(
+            params, cache=cache, tokens=jnp.asarray([toks[t], 1]))
+        outs.append(np.asarray(logits[0]))
+    np.testing.assert_allclose(fresh, np.stack(outs), atol=2e-3)
+
+
+def test_staggered_positions(setup):
+    """Sequences at different depths coexist: positions advance per
+    sequence independently after a reset."""
+    cfg, model, params = setup
+    cache = model.init_cache(batch=2, cache_len=16)
+    for t in range(4):
+        _, cache = model.decode_step(params, cache=cache,
+                                     tokens=jnp.asarray([1, 2]))
+    cache = reset_slots(cache, jnp.asarray([True, False]))
+    _, cache = model.decode_step(params, cache=cache,
+                                 tokens=jnp.asarray([1, 2]))
+    assert int(cache["pos"][0]) == 1
+    assert int(cache["pos"][1]) == 5

@@ -1,0 +1,102 @@
+"""Local solvers approximate prox_{rho f}; contraction factors behave."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.solvers import (SolverConfig, clip_grad, local_train,
+                                solver_contraction)
+
+# quadratic f(w) = 0.5 w^T Q w + b w  =>  prox closed form
+Q = jnp.array([[3.0, 0.4], [0.4, 1.2]])
+B = jnp.array([0.3, -0.8])
+MU, L = 1.1, 3.1  # eigenvalue bounds of Q
+
+
+def fgrad(w, key):
+    del key
+    return Q @ w + B
+
+
+def closed_prox(v, rho):
+    return jnp.linalg.solve(jnp.eye(2) + rho * Q, v - rho * B)
+
+
+@pytest.mark.parametrize("name,n", [("gd", 200), ("agd", 100),
+                                    ("sgd", 200)])
+def test_solver_converges_to_prox(name, n):
+    v = jnp.array([1.0, 2.0])
+    rho = 0.7
+    cfg = SolverConfig(name=name, n_epochs=n)
+    w = local_train(fgrad, jnp.zeros(2), v, rho, cfg,
+                    jax.random.PRNGKey(0), MU, L)
+    np.testing.assert_allclose(w, closed_prox(v, rho), atol=1e-4)
+
+
+def test_noisy_gd_concentrates_near_prox():
+    v = jnp.array([1.0, 2.0])
+    rho = 0.7
+    cfg = SolverConfig(name="noisy_gd", n_epochs=100, tau=0.01)
+    ws = jax.vmap(lambda k: local_train(fgrad, jnp.zeros(2), v, rho, cfg,
+                                        k, MU, L))(
+        jax.random.split(jax.random.PRNGKey(0), 64))
+    np.testing.assert_allclose(jnp.mean(ws, axis=0), closed_prox(v, rho),
+                               atol=0.02)
+
+
+def test_warm_start_beats_cold_start():
+    """The paper's key initialization: starting at the previous x is
+    closer after few epochs than cold start when x is near the target."""
+    v = jnp.array([1.0, 2.0])
+    rho = 0.7
+    target = closed_prox(v, rho)
+    cfg = SolverConfig(name="gd", n_epochs=2)
+    near = target + 0.01
+    w_warm = local_train(fgrad, near, v, rho, cfg, jax.random.PRNGKey(0),
+                         MU, L)
+    w_cold = local_train(fgrad, jnp.zeros(2), v, rho, cfg,
+                         jax.random.PRNGKey(0), MU, L)
+    assert (jnp.linalg.norm(w_warm - target)
+            < jnp.linalg.norm(w_cold - target))
+
+
+def test_contraction_decreases_with_epochs():
+    rho = 1.0
+    vals = [solver_contraction(SolverConfig(name="gd", n_epochs=n),
+                               MU, L, rho) for n in (1, 2, 5, 10)]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert 0 < vals[-1] < 1
+
+
+def test_agd_contraction_eventually_beats_gd():
+    """Prop. 3: chi(N_e) has the accelerated sqrt(kappa) exponent, so for
+    N_e past the (1+kappa) burn-in it beats GD's chi^N_e."""
+    rho = 10.0  # ill-conditioned d => acceleration wins
+    mu, lsm = 0.01, 50.0
+    gd = solver_contraction(SolverConfig(name="gd", n_epochs=300),
+                            mu, lsm, rho)
+    agd = solver_contraction(SolverConfig(name="agd", n_epochs=300),
+                             mu, lsm, rho)
+    assert agd < gd < 1.0
+
+
+def test_clip_grad():
+    g = jnp.array([3.0, 4.0])
+    np.testing.assert_allclose(clip_grad(g, 5.0), g)
+    np.testing.assert_allclose(jnp.linalg.norm(clip_grad(g, 1.0)), 1.0,
+                               atol=1e-6)
+
+
+def test_empirical_contraction_matches_bound():
+    """|local_train(x) - local_train(y)| <= chi^Ne |x - y|."""
+    v = jnp.array([0.5, -0.5])
+    rho = 1.0
+    cfg = SolverConfig(name="gd", n_epochs=3)
+    chi_ne = solver_contraction(cfg, MU, L, rho)
+    x, y = jnp.array([2.0, -1.0]), jnp.array([-1.0, 3.0])
+    k = jax.random.PRNGKey(0)
+    wx = local_train(fgrad, x, v, rho, cfg, k, MU, L)
+    wy = local_train(fgrad, y, v, rho, cfg, k, MU, L)
+    assert (jnp.linalg.norm(wx - wy)
+            <= chi_ne * jnp.linalg.norm(x - y) + 1e-5)

@@ -1,0 +1,66 @@
+"""Lemma 4 (stochastic Banach-Picard): statistical check of the bound
+
+    E||x_k - xbar|| <= sqrt(pbar/punder) (zbar^k ||x_0 - xbar||
+                       + (1 - zbar^k)/(1 - zbar) nu)
+
+on a synthetic contractive operator with randomized coordinate updates
+and additive noise -- the engine behind Prop. 2."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+
+def _run_stoch_bp(key, T, xbar, p, nu_std, k_steps, x0):
+    """x_{i,k+1} = T_i x_k + e_i if u_i ~ Ber(p) else x_{i,k}."""
+    def step(x, k):
+        ku, ke = jax.random.split(jax.random.fold_in(key, k))
+        u = jax.random.bernoulli(ku, p, (x.shape[0],))
+        e = nu_std * jax.random.normal(ke, x.shape)
+        x_new = T @ x + e
+        return jnp.where(u, x_new, x), None
+
+    x, _ = jax.lax.scan(step, x0, jnp.arange(k_steps))
+    return x
+
+
+@given(st.integers(0, 1000), st.floats(0.3, 1.0), st.floats(0.0, 0.05))
+@settings(max_examples=20, deadline=None)
+def test_lemma4_bound_holds_statistically(seed, p, nu_std):
+    n = 6
+    rng = np.random.default_rng(seed)
+    # zeta-contractive linear operator with fixed point xbar
+    A = rng.normal(size=(n, n))
+    A = 0.6 * A / np.linalg.norm(A, 2)          # zeta = 0.6
+    zeta = float(np.linalg.norm(A, 2))
+    b = rng.normal(size=n)
+    xbar = np.linalg.solve(np.eye(n) - A, b)
+
+    global T
+    T = jnp.asarray(A)
+    x0 = jnp.zeros(n)
+    k_steps = 40
+    keys = jax.random.split(jax.random.PRNGKey(seed), 64)
+
+    def run(key):
+        def step(x, k):
+            ku, ke = jax.random.split(jax.random.fold_in(key, k))
+            u = jax.random.bernoulli(ku, p, (n,))
+            e = nu_std * jax.random.normal(ke, (n,))
+            x_new = T @ x + jnp.asarray(b) + e
+            return jnp.where(u, x_new, x), None
+
+        x, _ = jax.lax.scan(step, x0, jnp.arange(k_steps))
+        return jnp.linalg.norm(x - jnp.asarray(xbar))
+
+    dists = jax.vmap(run)(keys)
+    emp = float(jnp.mean(dists))
+
+    # Lemma 4 bound
+    zbar = np.sqrt(1 - p + p * zeta ** 2)
+    nu = nu_std * np.sqrt(n * p)  # E||e|| <= nu_std sqrt(n); active w.p. p
+    bound = (zbar ** k_steps * np.linalg.norm(x0 - xbar)
+             + (1 - zbar ** k_steps) / (1 - zbar) * nu)
+    # sqrt(pbar/punder) = 1 for uniform p
+    assert emp <= bound * 1.15 + 1e-6, (emp, bound)
