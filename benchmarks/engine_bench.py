@@ -1,0 +1,67 @@
+"""Unified round-engine benchmark: fused vs unfused local epochs and
+compressed vs uncompressed round wall-time at model scale.
+
+Times one jitted Fed-PLT round of a reduced transformer through
+``fed/runtime.py`` (i.e. through ``fed/engine.py``) for:
+
+  * baseline           -- gd local epochs, exact z-exchange
+  * pallas_fused       -- fedplt_update fused local step (NOTE: interpret
+                          mode on this CPU container, so the fused number
+                          is a correctness path, not TPU performance)
+  * topk50 / int8      -- compressed z uplink (adds the per-agent
+                          compressor to the round's critical path; the
+                          quantity bought is uplink bytes, reported as
+                          the compression ratio column)
+
+Rows: ``engine,<name>,<ms/round>,<rel to baseline>,<uplink ratio>``.
+"""
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data.synthetic import make_batch_for
+from repro.fed import runtime
+
+
+def _bench_round(cfg, model, fcfg, iters):
+    state = runtime.init_state(model, jax.random.PRNGKey(0), fcfg)
+    step = jax.jit(runtime.make_train_step(model, fcfg))
+    shape = InputShape("bench", 32, 8, "train")
+    batch = make_batch_for(cfg, shape, n_agents=fcfg.n_agents)
+    key = jax.random.PRNGKey(1)
+    state, _ = step(state, batch, key)         # compile + warm-up
+    jax.block_until_ready(state.x)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        state, m = step(state, batch, jax.random.fold_in(key, i))
+    jax.block_until_ready(state.x)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def run(quick=True):
+    iters = 3 if quick else 10
+    cfg = get_config("gemma2-2b").reduced()
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    base = dict(n_agents=2, n_epochs=2, gamma=0.1)
+
+    cases = [
+        ("baseline", dict(), 1.0),
+        ("pallas_fused", dict(use_pallas_update=True), 1.0),
+        ("topk50", dict(compression="topk", compress_ratio=0.5), 2.0),
+        ("topk25", dict(compression="topk", compress_ratio=0.25), 4.0),
+        ("int8", dict(compression="int8"), 4.0),
+    ]
+    rows = []
+    ms0 = None
+    for name, kw, uplink in cases:
+        fcfg = runtime.FedConfig(**base, **kw)
+        ms = _bench_round(cfg, model, fcfg, iters)
+        if ms0 is None:
+            ms0 = ms
+        rows.append(f"engine,{name},{ms:.1f},{ms / ms0:.2f}x,"
+                    f"uplink/{uplink:.0f}")
+    return rows

@@ -1,22 +1,18 @@
 """Fed-PLT -- Algorithm 1 of the paper, vectorized over agents.
 
-One round:
-  coordinator:  y = prox_{rho h / N}( mean_i z_i )            (Lemma 6)
-  agents i active (u_i ~ Ber(p_i)):
-      v_i   = 2 y - z_i
-      x_i   <- N_e epochs of the local solver on
-               d_i(w) = f_i(w) + ||w - v_i||^2/(2 rho),  warm start x_i
-      z_i   <- z_i + 2 (x_i - y)
-  agents inactive: state unchanged.
-
-The whole round is one jitted function; the training loop is a
-``lax.scan`` that also records the paper's convergence criterion.
+This is the paper-faithful *dense* front end: local states are a single
+``(N, n)`` array, i.e. the single-leaf case of the unified round engine
+in :mod:`repro.fed.engine`, which owns the round topology (coordinator
+prox -> reflection -> warm-started local solver -> Bernoulli
+participation -> optional compressed z-exchange).  This class only
+supplies the per-agent gradient oracles, curvature moduli, and the
+``lax.scan`` training loop that records the paper's convergence
+criterion.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import NamedTuple, Optional
 
 import jax
@@ -24,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import prox as prox_lib
 from repro.core.solvers import SolverConfig, local_train
+from repro.fed import engine
 
 
 class FedPLTState(NamedTuple):
@@ -32,9 +29,9 @@ class FedPLTState(NamedTuple):
     y: jnp.ndarray      # (n,)  coordinator model (last broadcast)
     key: jax.Array
     k: jnp.ndarray      # round counter
-    # compressed-communication state (zeros when compression == 'none'):
-    t: jnp.ndarray = None    # (N, n) coordinator's copy of each z_i
-    e: jnp.ndarray = None    # (N, n) error-feedback memory
+    # coordinator's copy of each z_i; lags z by the never-transmitted
+    # residual when the exchange is compressed (== z otherwise)
+    t: jnp.ndarray = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,10 +48,8 @@ class FedPLTConfig:
     # Remark 1 (uncoordinated solvers): per-agent step sizes tuned to the
     # LOCAL moduli (mu_i, L_i) instead of the global (min mu_i, max L_i)
     uncoordinated: bool = False
-    # beyond-paper: compressed z-exchange with error feedback (the paper
-    # cites quantized-DP work [25]-[27] as complementary; we implement
-    # increment compression: agents transmit C(dz + e), coordinator
-    # averages the transmitted copies)
+    # beyond-paper: compressed z-exchange with lag-based error feedback
+    # (see repro.fed.engine.compress_increment)
     compression: str = "none"         # none | topk | int8
     compress_ratio: float = 0.25      # top-k fraction kept
     # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
@@ -82,6 +77,11 @@ class FedPLT:
             self.mu_i = jnp.full((N,), self.mu)
             self.L_i = jnp.full((N,), self.L)
         self.prox_h = prox_lib.make_prox(config.prox_h)
+        self._ecfg = engine.RoundConfig(
+            n_agents=problem.n_agents, rho=config.rho,
+            participation=config.participation, damping=config.damping,
+            compression=config.compression,
+            compress_ratio=config.compress_ratio)
         self._round = jax.jit(self._round_impl)
 
     # ------------------------------------------------------------------
@@ -94,8 +94,7 @@ class FedPLT:
         else:
             x0 = jnp.zeros((N, n))
         return FedPLTState(x=x0, z=x0, y=jnp.zeros(n), key=k_state,
-                           k=jnp.zeros((), jnp.int32),
-                           t=x0, e=jnp.zeros((N, n)))
+                           k=jnp.zeros((), jnp.int32), t=x0)
 
     # ------------------------------------------------------------------
     def _fgrad(self, data, w, key):
@@ -113,35 +112,10 @@ class FedPLT:
         return (self.problem.Q, self.problem.c)
 
     # ------------------------------------------------------------------
-    def _compress(self, dz: jnp.ndarray) -> jnp.ndarray:
-        """Per-agent increment compressor (beyond-paper)."""
-        if self.cfg.compression == "topk":
-            k = max(1, int(self.cfg.compress_ratio * dz.shape[-1]))
-
-            def topk_row(row):
-                thresh = jnp.sort(jnp.abs(row))[-k]
-                return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
-
-            return jax.vmap(topk_row)(dz)
-        if self.cfg.compression == "int8":
-            scale = jnp.max(jnp.abs(dz), axis=-1, keepdims=True) / 127.0
-            scale = jnp.maximum(scale, 1e-12)
-            q = jnp.round(dz / scale).astype(jnp.int8)
-            return q.astype(dz.dtype) * scale
-        return dz
-
-    def _round_impl(self, state: FedPLTState) -> FedPLTState:
+    def _local_solver(self, x, v, k_solve):
+        """Engine LocalSolver: per-agent ``local_train`` under vmap, with
+        (possibly per-agent, Remark 1) curvature moduli."""
         cfg = self.cfg
-        key, k_part, k_solve = jax.random.split(state.key, 3)
-        compressed = cfg.compression != "none"
-
-        # -- coordinator: averages the *transmitted* copies when the
-        # exchange is compressed (t_i), else the exact z_i (Lemma 6) ----
-        z_seen = state.t if compressed else state.z
-        y = prox_lib.coordinator_prox(z_seen, cfg.rho, self.prox_h)
-
-        # -- agents ---------------------------------------------------------
-        v = 2.0 * y[None, :] - state.z
         solver_keys = jax.random.split(k_solve, self.problem.n_agents)
 
         def one_agent(data_i, x_i, v_i, key_i, mu_i, L_i):
@@ -149,31 +123,16 @@ class FedPLT:
             return local_train(fgrad, x_i, v_i, cfg.rho, cfg.solver,
                                key_i, mu_i, L_i)
 
-        data = self._agent_data()
-        w = jax.vmap(one_agent)(data, state.x, v, solver_keys,
+        w = jax.vmap(one_agent)(self._agent_data(), x, v, solver_keys,
                                 self.mu_i, self.L_i)
+        return w, None
 
-        # -- partial participation ---------------------------------------
-        u = jax.random.bernoulli(
-            k_part, cfg.participation,
-            (self.problem.n_agents,)).astype(w.dtype)[:, None]
-        x_new = u * w + (1.0 - u) * state.x
-        z_upd = state.z + 2.0 * cfg.damping * (w - y[None, :])
-        z_new = u * z_upd + (1.0 - u) * state.z
-
-        # -- compressed uplink -------------------------------------------
-        # t lags z by exactly the never-transmitted residual, so
-        # compressing (z_new - t) IS error feedback (adding a separate
-        # error memory would double-count the residual and diverge).
-        if compressed:
-            q = self._compress(z_new - state.t)
-            t_new = state.t + u * q          # coordinator copy advances
-            e_new = state.e
-        else:
-            t_new, e_new = z_new, state.e
-
-        return FedPLTState(x=x_new, z=z_new, y=y, key=key,
-                           k=state.k + 1, t=t_new, e=e_new)
+    def _round_impl(self, state: FedPLTState) -> FedPLTState:
+        res = engine.round_step(self._ecfg, state.x, state.z, state.t,
+                                state.key, self._local_solver,
+                                prox_h=self.prox_h)
+        return FedPLTState(x=res.x, z=res.z, y=res.y, key=res.next_key,
+                           k=state.k + 1, t=res.t)
 
     # ------------------------------------------------------------------
     def round(self, state: FedPLTState) -> FedPLTState:

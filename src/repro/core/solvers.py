@@ -1,4 +1,4 @@
-"""Local training solvers (paper Section IV-B).
+"""Local training solvers (paper Section IV-B), pytree-general.
 
 Every solver approximates the local proximal update
 
@@ -8,8 +8,16 @@ Every solver approximates the local proximal update
 by ``N_e`` epochs, **warm-started at the previous local state** (the
 initialization that makes Fed-PLT contractive, Section V-C1).
 
-A solver is driven by a per-agent stochastic gradient oracle
-``fgrad(w, key) -> grad f_i(w)`` (deterministic solvers ignore ``key``).
+States, reflections, and gradients are arbitrary pytrees -- a bare
+``jnp.ndarray`` (the dense convex experiments, per-agent under ``vmap``)
+is the single-leaf case; model-parameter pytrees whose leaves carry a
+leading agent axis (``batched=True``) are the model-scale case used by
+:mod:`repro.fed.engine`.
+
+A solver is driven by a stochastic gradient oracle
+``fgrad(w, key) -> grad f_i(w)`` (deterministic solvers ignore ``key``;
+with ``has_aux`` the oracle returns ``(grad, aux)`` and the stacked
+per-epoch aux is returned alongside the iterate).
 
 Solvers:
   * ``gd``        -- gradient descent, Eq. (11)
@@ -17,17 +25,23 @@ Solvers:
   * ``sgd``       -- minibatch SGD (oracle supplies the minibatch gradient)
   * ``noisy_gd``  -- DP noisy GD, Eq. (13):  w += -gamma grad d + t,
                      t ~ sqrt(2 gamma) N(0, tau^2 I)
+
+``use_pallas=True`` routes the inner update through the fused
+``fedplt_update`` Pallas kernel (3 HBM reads + 1 write per leaf instead
+of XLA's unfused round-trips) whenever the step size is a static float.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-GradOracle = Callable[[jnp.ndarray, jax.Array], jnp.ndarray]
+GradOracle = Callable[[Any, jax.Array], Any]
+
+tree_map = jax.tree_util.tree_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,7 +50,7 @@ class SolverConfig:
     n_epochs: int = 5                 # N_e
     step_size: Optional[float] = None  # gamma; None -> optimal for moduli
     tau: float = 0.0                  # DP noise std (noisy_gd)
-    clip: Optional[float] = None      # clip threshold L for grads (DP)
+    clip: Optional[float] = None      # clip threshold C for grads (DP)
 
     def resolve_step_size(self, mu_d: float, L_d: float) -> float:
         """gamma* = 2/(L_d + mu_d) minimizes the GD contraction factor
@@ -46,48 +60,118 @@ class SolverConfig:
         return 2.0 / (L_d + mu_d)
 
 
-def clip_grad(g: jnp.ndarray, clip: Optional[float]) -> jnp.ndarray:
-    """Norm clipping ``g * min(1, C / ||g||)`` (paper Assumption 3 remark)."""
+def grad_norm(g: Any, *, batched: bool = False) -> jnp.ndarray:
+    """l2 norm across all leaves; per-agent (over the leading axis) when
+    ``batched``."""
+    leaves = jax.tree_util.tree_leaves(g)
+    if batched:
+        sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)).reshape(
+            l.shape[0], -1), axis=-1) for l in leaves)
+    else:
+        sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                 for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def clip_grad(g: Any, clip: Optional[float], *,
+              batched: bool = False) -> Any:
+    """Norm clipping ``g * min(1, C / ||g||)`` (paper Assumption 3 remark).
+
+    The norm is over the whole gradient pytree -- per agent when
+    ``batched`` (leaves carry a leading agent axis).
+    """
     if clip is None:
         return g
-    nrm = jnp.linalg.norm(g)
-    return g * jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+    nrm = grad_norm(g, batched=batched)
+    factor = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+
+    def scale(l):
+        f = factor.reshape((-1,) + (1,) * (l.ndim - 1)) if batched \
+            else factor
+        return l * f.astype(l.dtype)
+
+    return tree_map(scale, g)
 
 
-def local_train(fgrad: GradOracle, w0: jnp.ndarray, v: jnp.ndarray,
-                rho: float, cfg: SolverConfig, key: jax.Array,
-                mu: float, L: float) -> jnp.ndarray:
+def _leaf_noise(w: Any, key: jax.Array, scale) -> Any:
+    """Per-leaf Gaussian noise tree (fp32), one folded key per leaf.
+
+    A single-leaf tree (the dense front end) draws straight from ``key``
+    -- the exact PRNG stream of the pre-refactor implementation, so
+    seeded DP experiments reproduce bit-for-bit."""
+    leaves, treedef = jax.tree_util.tree_flatten(w)
+    if len(leaves) == 1:
+        noise = [scale * jax.random.normal(key, leaves[0].shape,
+                                           jnp.float32)]
+    else:
+        noise = [scale * jax.random.normal(jax.random.fold_in(key, i),
+                                           l.shape, jnp.float32)
+                 for i, l in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noise)
+
+
+def local_train(fgrad: GradOracle, w0: Any, v: Any, rho: float,
+                cfg: SolverConfig, key: jax.Array, mu, L, *,
+                batched: bool = False, has_aux: bool = False,
+                use_pallas: bool = False):
     """Run ``cfg.n_epochs`` epochs of the chosen solver on d(w).
 
     ``mu``/``L`` are strong convexity / smoothness of f_i; d adds 1/rho to
-    both.  Returns w_{N_e}.
+    both.  Returns ``w_{N_e}`` (and the stacked per-epoch oracle aux when
+    ``has_aux``).
     """
     mu_d, L_d = mu + 1.0 / rho, L + 1.0 / rho
     gamma = cfg.resolve_step_size(mu_d, L_d)
     inv_rho = 1.0 / rho
+    # the fused kernel needs a static step size (pallas_call specializes
+    # on it); traced moduli (vmapped per-agent gamma) fall back to XLA
+    fused = use_pallas and isinstance(gamma, float) and cfg.name != "agd"
 
     def dgrad(w, k):
-        return clip_grad(fgrad(w, k), cfg.clip) + inv_rho * (w - v)
+        out = fgrad(w, k)
+        g, aux = out if has_aux else (out, None)
+        return clip_grad(g, cfg.clip, batched=batched), aux
+
+    def step_leaf(wl, gl, vl, tl):
+        """w - gamma (g + inv_rho (w - v)) [+ t], fp32 accumulation."""
+        if fused:
+            from repro.kernels.fedplt_update.ops import fedplt_update
+            return fedplt_update(wl, gl, vl, t=tl, gamma=gamma,
+                                 inv_rho=inv_rho)
+        new = (wl.astype(jnp.float32)
+               - gamma * (gl.astype(jnp.float32)
+                          + inv_rho * (wl.astype(jnp.float32)
+                                       - vl.astype(jnp.float32))))
+        if tl is not None:
+            new = new + tl
+        return new.astype(wl.dtype)
+
+    def tree_step(w, g, noise):
+        if noise is None:
+            return tree_map(lambda wl, gl, vl: step_leaf(wl, gl, vl, None),
+                            w, g, v)
+        return tree_map(step_leaf, w, g, v, noise)
 
     keys = jax.random.split(key, cfg.n_epochs)
 
     if cfg.name in ("gd", "sgd"):
         def body(w, k):
-            return w - gamma * dgrad(w, k), None
+            g, aux = dgrad(w, k)
+            return tree_step(w, g, None), aux
 
-        w, _ = jax.lax.scan(body, w0, keys)
-        return w
+        w, aux = jax.lax.scan(body, w0, keys)
+        return (w, aux) if has_aux else w
 
     if cfg.name == "noisy_gd":
         noise_scale = jnp.sqrt(2.0 * gamma) * cfg.tau
 
         def body(w, k):
             k_batch, k_noise = jax.random.split(k)
-            t = noise_scale * jax.random.normal(k_noise, w.shape)
-            return w - gamma * dgrad(w, k_batch) + t, None
+            g, aux = dgrad(w, k_batch)
+            return tree_step(w, g, _leaf_noise(w, k_noise, noise_scale)), aux
 
-        w, _ = jax.lax.scan(body, w0, keys)
-        return w
+        w, aux = jax.lax.scan(body, w0, keys)
+        return (w, aux) if has_aux else w
 
     if cfg.name == "agd":
         # Eq. (12): constant step 1/L_d, constant momentum beta.
@@ -96,12 +180,24 @@ def local_train(fgrad: GradOracle, w0: jnp.ndarray, v: jnp.ndarray,
 
         def body(carry, k):
             w, u_prev = carry
-            u = w - dgrad(w, k) / L_d
-            w_next = u + beta * (u - u_prev)
-            return (w_next, u), None
+            g, aux = dgrad(w, k)
+            u = tree_map(
+                lambda wl, gl, vl: (wl.astype(jnp.float32)
+                                    - (gl.astype(jnp.float32)
+                                       + inv_rho * (wl.astype(jnp.float32)
+                                                    - vl.astype(jnp.float32)))
+                                    / L_d).astype(wl.dtype),
+                w, g, v)
+            w_next = tree_map(
+                lambda ul, upl: (ul.astype(jnp.float32)
+                                 + beta * (ul.astype(jnp.float32)
+                                           - upl.astype(jnp.float32))
+                                 ).astype(ul.dtype),
+                u, u_prev)
+            return (w_next, u), aux
 
-        (w, _), _ = jax.lax.scan(body, (w0, w0), keys)
-        return w
+        (w, _), aux = jax.lax.scan(body, (w0, w0), keys)
+        return (w, aux) if has_aux else w
 
     raise ValueError(f"unknown solver {cfg.name!r}")
 

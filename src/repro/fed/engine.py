@@ -1,0 +1,231 @@
+"""The single Fed-PLT round engine: Algorithm 1 on agent-stacked pytrees.
+
+Every leaf of the state pytrees carries a leading agent axis ``(N, ...)``;
+a dense ``(N, n)`` array (the convex experiments in :mod:`repro.core`) is
+just the single-leaf case, a stacked model parameter pytree
+(:mod:`repro.fed.runtime`) the general one.  One round:
+
+  coordinator:  y = prox_{rho h / N}( mean_i z_i )            (Lemma 6)
+  agents i active (u_i ~ Ber(p_i)):
+      v_i   = 2 y - z_i                                       (reflection)
+      x_i   <- N_e epochs of the local solver on
+               d_i(w) = f_i(w) + ||w - v_i||^2/(2 rho),  warm start x_i
+      z_i   <- z_i + 2 * damping * (x_i - y)
+  agents inactive: state unchanged.
+
+The local solver is pluggable (:data:`LocalSolver`): adapters supply the
+gradient oracle / per-agent vmap; the *round topology* -- coordinator
+prox, reflection, participation masking, and the compressed z-exchange --
+lives only here, so ``core/fedplt.py`` and ``fed/runtime.py`` cannot
+diverge again.
+
+Compressed uplink (beyond-paper): agents transmit the compressed
+increment ``C(z_new - t)`` and the coordinator's copy ``t`` advances by
+exactly what was transmitted.  ``t`` therefore lags ``z`` by the
+never-transmitted residual, which *is* error feedback (an explicit error
+memory would double-count the residual and diverge).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+# (x_stack, v_stack, key) -> (w_stack, aux); aux may be None.  The solver
+# must be warm-started at x_stack (Section V-C1) -- the engine passes the
+# previous local states as the first argument.
+LocalSolver = Callable[[Any, Any, jax.Array], Tuple[Any, Any]]
+
+# Leaf-wise proximal operator of the coordinator regularizer h:
+# (zbar, rho_eff) -> y, applied to the agent-mean tree with
+# rho_eff = rho / N (Lemma 6).  None means h = 0 (identity).
+ProxH = Optional[Callable[[Any, float], Any]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundConfig:
+    """Round-topology knobs shared by every Fed-PLT front end."""
+
+    n_agents: int
+    rho: float = 1.0
+    participation: float = 1.0        # p (uniform across agents)
+    # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
+    # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
+    # stabilize aggressively compressed exchanges.
+    damping: float = 1.0
+    compression: str = "none"         # none | topk | int8
+    compress_ratio: float = 0.25      # top-k fraction kept
+
+    @property
+    def compressed(self) -> bool:
+        return self.compression != "none"
+
+
+class RoundResult(NamedTuple):
+    x: Any               # pytree, leaves (N, ...)
+    z: Any               # pytree, leaves (N, ...)
+    t: Any               # coordinator's copy of z (== z when uncompressed)
+    y: Any               # pytree, coordinator model (no agent axis)
+    next_key: jax.Array  # carried PRNG state
+    u: jnp.ndarray       # (N,) participation draw of this round
+    aux: Any             # whatever the local solver returned
+
+
+# ---------------------------------------------------------------------------
+# Round pieces
+# ---------------------------------------------------------------------------
+
+def agent_mean(z: Any) -> Any:
+    """Mean over the leading agent axis, leaf-wise."""
+    return tree_map(lambda zl: jnp.mean(zl, axis=0), z)
+
+
+def coordinator_prox(z: Any, cfg: RoundConfig, prox_h: ProxH = None) -> Any:
+    """``y = prox_{rho h / N}(mean_i z_i)`` on pytrees (Lemma 6)."""
+    zbar = agent_mean(z)
+    if prox_h is None:
+        return zbar
+    rho_eff = cfg.rho / cfg.n_agents
+    return tree_map(lambda zl: prox_h(zl, rho_eff), zbar)
+
+
+def reflect(y: Any, z: Any) -> Any:
+    """``v = 2 y - z`` with y broadcast across the agent axis."""
+    return tree_map(lambda yl, zl: 2.0 * yl[None] - zl, y, z)
+
+
+def participation_mask(key: jax.Array, cfg: RoundConfig) -> jnp.ndarray:
+    """One Bernoulli(p) draw per agent, as a float (N,) vector."""
+    return jax.random.bernoulli(
+        key, cfg.participation, (cfg.n_agents,)).astype(jnp.float32)
+
+
+def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
+    """Select ``new`` where the agent participated, ``old`` otherwise,
+    leaf-wise.  ``jnp.where`` (not ``u*new + (1-u)*old``) so a diverged
+    local solve (NaN/Inf) cannot leak into agents that sat the round
+    out; for finite values the two are bit-identical with u in {0, 1}."""
+    mask = u != 0
+
+    def mix(nl, ol):
+        return jnp.where(mask.reshape((-1,) + (1,) * (nl.ndim - 1)),
+                         nl, ol)
+
+    return tree_map(mix, new, old)
+
+
+# ---------------------------------------------------------------------------
+# Compressed z-exchange
+# ---------------------------------------------------------------------------
+
+def _compress_rows(dz: jnp.ndarray, cfg: RoundConfig) -> jnp.ndarray:
+    """Per-agent compressor on a flattened (N, m) increment."""
+    if cfg.compression == "topk":
+        k = max(1, int(cfg.compress_ratio * dz.shape[-1]))
+
+        def topk_row(row):
+            thresh = jnp.sort(jnp.abs(row))[-k]
+            return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
+
+        return jax.vmap(topk_row)(dz)
+    if cfg.compression == "int8":
+        scale = jnp.max(jnp.abs(dz), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.round(dz / scale).astype(jnp.int8)
+        return q.astype(dz.dtype) * scale
+    return dz
+
+
+def compress_increment(dz: Any, cfg: RoundConfig) -> Any:
+    """Apply the per-agent compressor leaf-wise (each leaf is flattened to
+    (N, m): top-k / int8 scales are per agent per leaf, which is what an
+    actual uplink would quantize)."""
+    def leaf(l):
+        return _compress_rows(l.reshape(l.shape[0], -1), cfg).reshape(l.shape)
+
+    return tree_map(leaf, dz)
+
+
+# ---------------------------------------------------------------------------
+# One round
+# ---------------------------------------------------------------------------
+
+def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
+               local_solver: LocalSolver, prox_h: ProxH = None) -> RoundResult:
+    """One Fed-PLT round on agent-stacked pytrees.
+
+    ``t`` is the coordinator's copy of ``z`` (pass ``z`` itself when the
+    exchange is uncompressed).  Consumes ``key`` exactly like the
+    historical implementations: split 3 ways (carry, participation,
+    solver).
+    """
+    key, k_part, k_solve = jax.random.split(key, 3)
+
+    # -- coordinator: averages the *transmitted* copies when the exchange
+    # is compressed (t_i), else the exact z_i (Lemma 6) ------------------
+    z_seen = t if cfg.compressed else z
+    y = coordinator_prox(z_seen, cfg, prox_h)
+
+    # -- agents: reflection + warm-started local training ----------------
+    v = reflect(y, z)
+    w, aux = local_solver(x, v, k_solve)
+
+    # -- partial participation ------------------------------------------
+    u = participation_mask(k_part, cfg)
+    x_new = masked_mix(u, w, x)
+    z_upd = tree_map(
+        lambda zl, wl, yl: zl + 2.0 * cfg.damping * (wl - yl[None]),
+        z, w, y)
+    z_new = masked_mix(u, z_upd, z)
+
+    # -- compressed uplink: t advances by the transmitted increment ------
+    if cfg.compressed:
+        q = compress_increment(tree_map(jnp.subtract, z_new, t), cfg)
+        # arithmetic (u*q) masking, not jnp.where: an inactive agent's
+        # increment is computed from its own finite old state so there is
+        # no NaN hazard here, and the historical `t + u*q` lets XLA
+        # contract the int8 dequant-multiply + add into one FMA --
+        # keeping compressed trajectories bit-identical to pre-refactor
+        t_new = tree_map(
+            lambda tl, ql: tl + u.astype(ql.dtype).reshape(
+                (-1,) + (1,) * (ql.ndim - 1)) * ql,
+            t, q)
+    else:
+        t_new = z_new
+
+    return RoundResult(x=x_new, z=z_new, t=t_new, y=y, next_key=key, u=u,
+                       aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# Default local solver: core/solvers.py generalized to stacked pytrees
+# ---------------------------------------------------------------------------
+
+def make_local_solver(solver_cfg, fgrad, rho: float, mu: float = 0.0,
+                      L: float = 0.0, *, use_pallas: bool = False,
+                      has_aux: bool = False) -> LocalSolver:
+    """Build a :data:`LocalSolver` from a stacked gradient oracle.
+
+    ``fgrad(w_stack, key)`` returns the per-agent gradient pytree (leaves
+    (N, ...)); with ``has_aux`` it returns ``(grads, aux)``.  Solver
+    choice, step size, DP noise, and per-agent clipping all come from
+    ``solver_cfg`` (a :class:`repro.core.solvers.SolverConfig`); the
+    fused ``fedplt_update`` Pallas kernel is used for the inner step when
+    ``use_pallas`` and the step size is static.
+    """
+    from repro.core.solvers import local_train
+
+    def solver(x, v, key):
+        out = local_train(fgrad, x, v, rho, solver_cfg, key, mu, L,
+                          batched=True, has_aux=has_aux,
+                          use_pallas=use_pallas)
+        if has_aux:
+            return out
+        return out, None
+
+    return solver

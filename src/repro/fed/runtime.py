@@ -3,17 +3,19 @@
 The paper's agents become mesh slices: per-agent states (x_i, z_i) are the
 model parameter pytree stacked on a leading agent axis (sharded over
 'data' on a single pod, over 'pod' across pods).  One jitted
-``train_step`` is one Fed-PLT round:
+``train_step`` is one Fed-PLT round, delegated to the unified round
+engine (:mod:`repro.fed.engine`):
 
   1. coordinator:  y = prox_h( mean_A z )        -- ONE agent-axis
      all-reduce per round (vs one per step for FedAvg-style DP training:
      this is the paper's communication saving, mapped to the inter-slice
      link);
-  2. N_e local epochs of  w <- w - gamma (grad f_i(w) + (w - v_i)/rho) + t,
-     t ~ sqrt(2 gamma) N(0, tau^2)  -- no agent-axis collectives inside
-     (``lax.scan``; the fused update is the fedplt_update Pallas kernel on
-     TPU);
-  3. masked participation update of (x, z).
+  2. N_e local epochs of the chosen solver (gd / agd / sgd / noisy_gd,
+     :mod:`repro.core.solvers` generalized to pytrees) -- no agent-axis
+     collectives inside; the fused update is the fedplt_update Pallas
+     kernel on TPU;
+  3. masked participation update of (x, z), optionally with topk/int8
+     increment compression of the z uplink (lag-based error feedback).
 
 The gradient grad f_i is computed on the agent's local batch, vmapped over
 the agent axis; within an agent, activations shard over 'model' (+'data'
@@ -28,6 +30,8 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.solvers import SolverConfig
+from repro.fed import engine
 from repro.models.model import Model
 
 
@@ -35,6 +39,9 @@ class FedState(NamedTuple):
     x: Any              # pytree, leaves (A, ...)
     z: Any              # pytree, leaves (A, ...)
     step: jnp.ndarray
+    # coordinator's copy of z -- only materialized when the z-exchange is
+    # compressed (None otherwise: at model scale t doubles state memory)
+    t: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,37 +51,79 @@ class FedConfig:
     gamma: float = 0.05
     n_epochs: int = 5
     participation: float = 1.0
-    tau: float = 0.0                 # DP noise std (noisy local GD)
+    tau: float = 0.0                 # DP noise std (forces noisy local GD)
     clip: Optional[float] = None     # per-agent gradient clipping
     weight_decay: float = 0.0        # coordinator prox: l2 regularizer h
     use_pallas_update: bool = False  # fused fedplt_update kernel for the
     #   local step (interpret-mode on CPU; real kernel on TPU)
+    solver: str = "gd"               # gd | agd | sgd (tau>0 -> noisy_gd)
+    # curvature moduli of the local losses; 0 -> derived from gamma so
+    # that agd's 1/L_d step equals gamma
+    mu: float = 0.0
+    L: float = 0.0
+    compression: str = "none"        # none | topk | int8 (z uplink)
+    compress_ratio: float = 0.25
+    damping: float = 1.0             # Krasnosel'skii relaxation
+
+    def solver_name(self) -> str:
+        """tau > 0 turns the gd-type solvers into DP noisy GD."""
+        if self.tau > 0.0:
+            if self.solver == "agd":
+                raise ValueError("DP noise (tau > 0) requires a gd-type "
+                                 "solver, not 'agd'")
+            return "noisy_gd"
+        return self.solver
+
+    def solver_config(self) -> SolverConfig:
+        return SolverConfig(name=self.solver_name(),
+                            n_epochs=self.n_epochs, step_size=self.gamma,
+                            tau=self.tau, clip=self.clip)
+
+    def moduli(self) -> tuple[float, float]:
+        """(mu, L) of the local f_i for momentum resolution.  gd-type
+        solvers step with the configured gamma regardless; when L is
+        unknown we pick L_d = 1/gamma so that agd's 1/L_d step also
+        equals gamma.  That inversion needs gamma < rho/(1 + mu*rho);
+        agd with a larger gamma must pass L explicitly (enforced in
+        :func:`make_train_step`)."""
+        if self.L > 0.0:
+            return self.mu, self.L
+        return self.mu, 1.0 / self.gamma - 1.0 / self.rho
+
+    def round_config(self) -> engine.RoundConfig:
+        return engine.RoundConfig(
+            n_agents=self.n_agents, rho=self.rho,
+            participation=self.participation, damping=self.damping,
+            compression=self.compression,
+            compress_ratio=self.compress_ratio)
 
 
 def init_state(model: Model, key: jax.Array, fcfg: FedConfig) -> FedState:
     params = model.init(key)
     stacked = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p, (fcfg.n_agents,) + p.shape), params)
-    return FedState(x=stacked, z=stacked, step=jnp.zeros((), jnp.int32))
+    t = stacked if fcfg.compression != "none" else None
+    return FedState(x=stacked, z=stacked, step=jnp.zeros((), jnp.int32),
+                    t=t)
+
+
+def _prox_h(fcfg: FedConfig):
+    """Leaf-wise engine ProxH of h = (wd/2)||.||^2 (Lemma 6); None when
+    weight_decay = 0 (smooth problems, h = 0).  The engine calls it with
+    rho_eff = rho / N."""
+    if fcfg.weight_decay == 0.0:
+        return None
+    return lambda yl, rho_eff: yl / (1.0 + fcfg.weight_decay * rho_eff)
 
 
 def _coordinator_prox(zbar, fcfg: FedConfig):
-    """prox of h = (wd/2)||.||^2 at the coordinator (Lemma 6); identity
-    when weight_decay = 0 (smooth problems, h = 0)."""
-    if fcfg.weight_decay == 0.0:
+    """Apply the coordinator prox to an agent-mean pytree (convenience /
+    test hook; delegates to the same :func:`_prox_h` the engine uses)."""
+    prox = _prox_h(fcfg)
+    if prox is None:
         return zbar
-    shrink = 1.0 / (1.0 + fcfg.rho * fcfg.weight_decay / fcfg.n_agents)
-    return jax.tree_util.tree_map(lambda t: t * shrink, zbar)
-
-
-def _clip_tree(g, clip):
-    if clip is None:
-        return g
-    leaves = jax.tree_util.tree_leaves(g)
-    nrm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                       for l in leaves))
-    factor = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
-    return jax.tree_util.tree_map(lambda l: l * factor.astype(l.dtype), g)
+    rho_eff = fcfg.rho / fcfg.n_agents
+    return jax.tree_util.tree_map(lambda t: prox(t, rho_eff), zbar)
 
 
 def make_train_step(model: Model, fcfg: FedConfig, use_remat: bool = True):
@@ -82,6 +131,19 @@ def make_train_step(model: Model, fcfg: FedConfig, use_remat: bool = True):
 
     ``batch`` leaves carry a leading agent axis: tokens (A, b, S), etc.
     """
+    scfg = fcfg.solver_config()
+    ecfg = fcfg.round_config()
+    prox_h = _prox_h(fcfg)
+    mu, L = fcfg.moduli()
+    if fcfg.clip is not None and fcfg.clip <= 0.0:
+        raise ValueError("FedConfig.clip must be positive (clip=0 zeroes "
+                         "every gradient; use None to disable clipping)")
+    if scfg.name == "agd" and L <= mu:
+        raise ValueError(
+            f"agd momentum needs L > mu; derived L={L:.4g} from "
+            f"gamma={fcfg.gamma} (needs gamma < rho/(1 + mu*rho) = "
+            f"{fcfg.rho / (1.0 + fcfg.mu * fcfg.rho):.4g}) -- pass an "
+            f"explicit L in FedConfig")
 
     def per_agent_loss(params_i, batch_i):
         return model.loss_fn(params_i, batch=batch_i, remat=use_remat)
@@ -89,78 +151,28 @@ def make_train_step(model: Model, fcfg: FedConfig, use_remat: bool = True):
     grad_fn = jax.value_and_grad(per_agent_loss)
 
     def train_step(state: FedState, batch, key: jax.Array):
-        A = fcfg.n_agents
-        k_part, k_noise = jax.random.split(jax.random.fold_in(key,
-                                                              state.step))
+        rkey = jax.random.fold_in(key, state.step)
 
-        # ---- coordinator: ONE cross-agent collective per round ---------
-        zbar = jax.tree_util.tree_map(lambda z: jnp.mean(z, axis=0),
-                                      state.z)
-        y = _coordinator_prox(zbar, fcfg)
-        v = jax.tree_util.tree_map(lambda yy, zz: 2.0 * yy[None] - zz,
-                                   y, state.z)
-
-        # ---- local training: N_e epochs, no cross-agent collectives ----
-        inv_rho = 1.0 / fcfg.rho
-        noise_scale = jnp.sqrt(2.0 * fcfg.gamma) * fcfg.tau
-
-        def local_epoch(w, epoch_key):
+        def fgrad(w, k):
+            del k  # the local batch is fixed within a round
             losses, g = jax.vmap(grad_fn)(w, batch)
-            if fcfg.clip is not None:
-                g = jax.vmap(lambda gi: _clip_tree(gi, fcfg.clip))(g)
+            return g, losses
 
-            def upd(w_l, g_l, v_l, path_seed):
-                noise = None
-                if fcfg.tau > 0.0:
-                    nk = jax.random.fold_in(epoch_key, path_seed)
-                    noise = noise_scale * jax.random.normal(
-                        nk, w_l.shape, jnp.float32)
-                if fcfg.use_pallas_update:
-                    # fused Pallas kernel: 3 reads + 1 write, fp32 accum
-                    from repro.kernels.fedplt_update.ops import \
-                        fedplt_update
-                    new = fedplt_update(
-                        w_l, g_l.astype(w_l.dtype), v_l.astype(w_l.dtype),
-                        t=None if noise is None else
-                        noise.astype(w_l.dtype),
-                        gamma=fcfg.gamma, inv_rho=inv_rho)
-                    return new
-                new = w_l - fcfg.gamma * (
-                    g_l.astype(jnp.float32)
-                    + inv_rho * (w_l.astype(jnp.float32)
-                                 - v_l.astype(jnp.float32)))
-                if noise is not None:
-                    new = new + noise
-                return new.astype(w_l.dtype)
+        local_solver = engine.make_local_solver(
+            scfg, fgrad, fcfg.rho, mu, L,
+            use_pallas=fcfg.use_pallas_update, has_aux=True)
 
-            leaves, treedef = jax.tree_util.tree_flatten(w)
-            g_leaves = treedef.flatten_up_to(g)
-            v_leaves = treedef.flatten_up_to(v)
-            new_leaves = [upd(wl, gl, vl, i) for i, (wl, gl, vl)
-                          in enumerate(zip(leaves, g_leaves, v_leaves))]
-            return (jax.tree_util.tree_unflatten(treedef, new_leaves),
-                    jnp.mean(losses))
-
-        w, epoch_losses = jax.lax.scan(
-            local_epoch, state.x, jax.random.split(k_noise, fcfg.n_epochs))
-
-        # ---- partial participation -------------------------------------
-        u = jax.random.bernoulli(k_part, fcfg.participation, (A,))
-
-        def mix(new, old):
-            mask = u.reshape((A,) + (1,) * (new.ndim - 1))
-            return jnp.where(mask, new, old)
-
-        x_new = jax.tree_util.tree_map(mix, w, state.x)
-        z_new = jax.tree_util.tree_map(
-            lambda z_l, w_l, y_l: mix(z_l + 2.0 * (w_l - y_l[None]), z_l),
-            state.z, w, y)
+        t = state.t if ecfg.compressed else state.z
+        res = engine.round_step(ecfg, state.x, state.z, t, rkey,
+                                local_solver, prox_h=prox_h)
 
         metrics = {
-            "loss": epoch_losses[-1],
-            "participation": jnp.mean(u.astype(jnp.float32)),
+            "loss": jnp.mean(res.aux[-1]),   # (N_e, A) per-epoch losses
+            "participation": jnp.mean(res.u.astype(jnp.float32)),
         }
-        return FedState(x=x_new, z=z_new, step=state.step + 1), metrics
+        new_state = FedState(x=res.x, z=res.z, step=state.step + 1,
+                             t=res.t if ecfg.compressed else None)
+        return new_state, metrics
 
     return train_step
 
@@ -168,3 +180,35 @@ def make_train_step(model: Model, fcfg: FedConfig, use_remat: bool = True):
 def consensus_model(state: FedState):
     """The deployable model: the coordinator average of the agent states."""
     return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), state.x)
+
+
+def privacy_report(fcfg: FedConfig, n_rounds: int, local_dataset_size: int,
+                   delta: float = 1e-5):
+    """Position a DP training run on the paper's (eps, delta) map
+    (Prop. 4 + Lemma 5 via :mod:`repro.core.privacy`).
+
+    At model scale the local losses are nonconvex, so we account with the
+    curvature the algorithm actually optimizes against: the proximal term
+    gives d_i strong convexity >= weight_decay + 1/rho.
+
+    Sensitivity convention: ``core.privacy`` expects the paper's
+    Assumption-3 L (a PER-SAMPLE gradient bound; the bound divides by
+    q^2).  The runtime clips the per-agent MEAN gradient at C, so
+    swapping one of q samples can move the clipped gradient by up to 2C
+    -- the per-sample-equivalent bound is L = C * q.  An unclipped run
+    assumes per-sample bound L = 1.0 and a loud caveat is on the caller.
+    """
+    from repro.core.privacy import PrivacyReport
+
+    if fcfg.tau <= 0.0:
+        raise ValueError("privacy_report requires tau > 0")
+    if fcfg.clip is not None and fcfg.clip <= 0.0:
+        raise ValueError("clip must be positive (clip=0 zeroes every "
+                         "gradient)")
+    mu_eff = fcfg.weight_decay + 1.0 / fcfg.rho
+    sensitivity = (fcfg.clip * local_dataset_size
+                   if fcfg.clip is not None else 1.0)
+    return PrivacyReport.build(
+        sensitivity=sensitivity, mu=mu_eff, tau=fcfg.tau,
+        q=local_dataset_size, gamma=fcfg.gamma, K=n_rounds,
+        n_epochs=fcfg.n_epochs, delta=delta)

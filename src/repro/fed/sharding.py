@@ -125,6 +125,25 @@ def param_specs(params, *, fsdp_axis: Optional[str] = "data",
     return jax.tree_util.tree_map_with_path(spec, params)
 
 
+def fed_state_specs(stacked_params, *, fsdp_axis: Optional[str] = "data",
+                    agent_axis: Optional[str] = None,
+                    axis_sizes: Optional[dict] = None,
+                    compressed: bool = False):
+    """PartitionSpec pytree for a :class:`repro.fed.runtime.FedState`.
+
+    ``stacked_params``: the agent-stacked parameter pytree (or its
+    ShapeDtypeStructs) -- x, z, and (when ``compressed``) the
+    coordinator copy t all share its layout; the step counter is
+    replicated.
+    """
+    from repro.fed.runtime import FedState
+
+    pspec = param_specs(stacked_params, fsdp_axis=fsdp_axis,
+                        agent_axis=agent_axis, axis_sizes=axis_sizes)
+    return FedState(x=pspec, z=pspec, step=P(),
+                    t=pspec if compressed else None)
+
+
 def shardings(mesh: Mesh, spec_tree):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

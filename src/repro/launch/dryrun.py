@@ -81,10 +81,9 @@ def build_case(arch: str, shape_name: str, mesh, mode: str = "fed",
         state_shape = jax.eval_shape(
             partial(runtime.init_state, model, fcfg=fcfg),
             jax.random.PRNGKey(0))
-        pspec = sharding.param_specs(state_shape.x, fsdp_axis=fsdp_axis,
-                                     agent_axis=agent_axis,
-                                     axis_sizes=axes)
-        state_spec = runtime.FedState(x=pspec, z=pspec, step=P())
+        state_spec = sharding.fed_state_specs(
+            state_shape.x, fsdp_axis=fsdp_axis, agent_axis=agent_axis,
+            axis_sizes=axes, compressed=fcfg.compression != "none")
         # batch: (A, B/A, S): per-agent batch shards over 'data' when the
         # agent axis is dedicated ('agent'/'pod'), else unsharded
         inner_axis = "data" if agent_axis != "data" else None

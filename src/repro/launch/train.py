@@ -44,6 +44,26 @@ def main():
     ap.add_argument("--tau", type=float, default=0.0,
                     help="DP noise std (noisy local GD)")
     ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--solver", default="gd",
+                    choices=["gd", "agd", "sgd"],
+                    help="local solver (tau>0 upgrades gd-type to "
+                         "noisy_gd)")
+    ap.add_argument("--clip", type=float, default=None,
+                    help="per-agent gradient clip threshold (DP "
+                         "sensitivity)")
+    ap.add_argument("--weight-decay", type=float, default=0.0,
+                    help="coordinator l2 regularizer h")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "int8"],
+                    help="z-uplink increment compression")
+    ap.add_argument("--compress-ratio", type=float, default=0.25)
+    ap.add_argument("--use-pallas-update", action="store_true",
+                    help="fused fedplt_update kernel for the local step")
+    ap.add_argument("--delta", type=float, default=1e-5,
+                    help="ADP delta for the privacy report")
+    ap.add_argument("--local-dataset-size", type=int, default=None,
+                    help="smallest local dataset size q_i for the "
+                         "privacy report (default: per-agent batch)")
     ap.add_argument("--optimizer", default="sgd",
                     choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -61,7 +81,24 @@ def main():
         fcfg = runtime.FedConfig(
             n_agents=args.n_agents, rho=args.rho, gamma=args.gamma,
             n_epochs=args.n_epochs, participation=args.participation,
-            tau=args.tau)
+            tau=args.tau, clip=args.clip, weight_decay=args.weight_decay,
+            solver=args.solver, compression=args.compression,
+            compress_ratio=args.compress_ratio,
+            use_pallas_update=args.use_pallas_update)
+        if args.tau > 0:
+            # every DP run states its (eps, delta) position up front
+            # make_batch_for splits the global batch across agents
+            q = args.local_dataset_size or max(1, args.batch
+                                               // args.n_agents)
+            rep = runtime.privacy_report(fcfg, args.steps, q,
+                                         delta=args.delta)
+            caveat = "" if args.clip is not None else \
+                " (UNCLIPPED: per-sample sensitivity assumed 1.0 -- " \
+                "pass --clip)"
+            print(f"privacy: ({rep.adp_eps:.3f}, {rep.adp_delta:.0e})-ADP"
+                  f" over K={rep.K} rounds x N_e={rep.n_epochs};"
+                  f" ceiling as K*Ne->inf: eps={rep.eps_ceiling:.3f}"
+                  f" at Renyi order {rep.rdp_order:.1f}{caveat}")
         state = runtime.init_state(model, key, fcfg)
         step = jax.jit(runtime.make_train_step(model, fcfg))
         for i in range(args.steps):
