@@ -15,10 +15,9 @@ import jax
 import numpy as np
 
 from repro.core import baselines
-from repro.core.fedplt import FedPLT, FedPLTConfig
-from repro.core.metrics import evaluate, hitting_round
+from repro.core.metrics import hitting_round
 from repro.core.problem import make_logreg_problem
-from repro.core.solvers import SolverConfig
+from repro.fed.api import FedSpec, PrivacySpec, build_trainer
 
 N_AGENTS, DIM, Q, EPS = 100, 5, 250, 0.5
 
@@ -32,16 +31,16 @@ def paper_problem(nonconvex: bool = False, dim: int = DIM):
 def fedplt_runner(problem, n_epochs=5, rho=1.0, solver="gd",
                   participation=1.0, tau=0.0, batch_size=None,
                   step_size=None):
-    cfg = FedPLTConfig(
+    spec = FedSpec(
         rho=rho, participation=participation, batch_size=batch_size,
-        solver=SolverConfig(name=solver, n_epochs=n_epochs, tau=tau,
-                            step_size=step_size),
+        solver=solver, n_epochs=n_epochs, gamma=step_size,
+        privacy=PrivacySpec(tau=tau),
         mu=0.05 if problem.nonconvex else None,
         L=4.0 if problem.nonconvex else None)
-    algo = FedPLT(problem, cfg)
+    trainer = build_trainer(problem, spec)
 
     def run(key, n_rounds):
-        _, crit = algo.run(key, n_rounds)
+        _, crit = trainer.run(key, n_rounds)
         return crit
 
     time_fn = lambda tG, tC: (n_epochs * tG + tC) * \

@@ -1,0 +1,52 @@
+"""Registry-driven uplink-compression sweep.
+
+Unlike ``compression_bench`` (a fixed case list), this harness walks
+EVERY compressor registered in :mod:`repro.fed.compress` -- including
+the per-agent adaptive one and anything registered after this file was
+written -- through the :class:`repro.fed.api.FedSpec` front door, so
+BENCH output tracks the per-round cost of each uplink compressor as the
+registry grows.
+
+Rows: ``compress_bench,<name>,<rounds-to-threshold>,<final criterion>,
+keep=<measured kept fraction>;ms=<ms per round>``.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import hitting_round
+from repro.core.problem import make_logreg_problem
+from repro.fed.api import CompressionSpec, FedSpec, build_trainer
+from repro.fed.compress import available_compressors, get_compressor
+
+
+def run(quick=True):
+    rows = []
+    prob = make_logreg_problem(n_agents=100, q=250, dim=20, seed=0)
+    rounds = 600 if quick else 1000
+    # measured keep fraction on a fixed probe increment: the sparsity an
+    # actual uplink would exploit (int8 keeps everything but sends 8
+    # bits; the keep column tracks sparsity only)
+    probe = jax.random.normal(jax.random.PRNGKey(1),
+                              (prob.n_agents, 256))
+    for name in available_compressors():
+        comp = CompressionSpec(name=name, ratio=0.25, energy=0.9)
+        trainer = build_trainer(
+            prob, FedSpec(rho=1.0, n_epochs=5, compression=comp))
+        t0 = time.perf_counter()
+        _, crit = trainer.run(jax.random.PRNGKey(0), rounds)
+        crit = np.asarray(crit)          # blocks on the scan
+        ms = (time.perf_counter() - t0) / rounds * 1e3
+        k = hitting_round(crit)
+        rc = trainer.spec.round_config()
+        kept = float(jnp.mean(get_compressor(name)(probe, rc) != 0.0))
+        rows.append(f"compress_bench,{name},{k if k else '-'},"
+                    f"{crit[-1]:.3e},keep={kept:.2f};ms={ms:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,31 +1,32 @@
 """Beyond-paper: compressed z-exchange -- rounds-to-threshold and uplink
 bytes vs compressor, on the paper's problem (dim=20 variant so top-k has
-room to sparsify)."""
+room to sparsify).  Construction goes through the front door
+(:class:`repro.fed.api.FedSpec`); see ``compress_bench`` for the
+registry-driven sweep over every registered compressor."""
 
 import jax
 import numpy as np
 
-from repro.core.fedplt import FedPLT, FedPLTConfig
 from repro.core.metrics import hitting_round
 from repro.core.problem import make_logreg_problem
-from repro.core.solvers import SolverConfig
+from repro.fed.api import CompressionSpec, FedSpec, build_trainer
 
 
 def run(quick=True):
     rows = []
     prob = make_logreg_problem(n_agents=100, q=250, dim=20, seed=0)
-    gd5 = SolverConfig(name="gd", n_epochs=5)
     cases = [
-        ("exact", dict(), 32),                      # bits per coordinate
-        ("int8", dict(compression="int8"), 8),
-        ("topk50", dict(compression="topk", compress_ratio=0.5), 16),
-        ("topk25", dict(compression="topk", compress_ratio=0.25), 8),
-        ("topk10", dict(compression="topk", compress_ratio=0.1), 3.2),
+        ("exact", CompressionSpec(), 32),           # bits per coordinate
+        ("int8", CompressionSpec(name="int8"), 8),
+        ("topk50", CompressionSpec(name="topk", ratio=0.5), 16),
+        ("topk25", CompressionSpec(name="topk", ratio=0.25), 8),
+        ("topk10", CompressionSpec(name="topk", ratio=0.1), 3.2),
     ]
     k_exact = None
-    for name, kw, bits in cases:
-        cfg = FedPLTConfig(rho=1.0, solver=gd5, **kw)
-        _, crit = FedPLT(prob, cfg).run(jax.random.PRNGKey(0), 1000)
+    for name, comp, bits in cases:
+        spec = FedSpec(rho=1.0, n_epochs=5, compression=comp)
+        _, crit = build_trainer(prob, spec).run(jax.random.PRNGKey(0),
+                                                1000)
         k = hitting_round(np.asarray(crit))
         if k_exact is None:
             k_exact = k

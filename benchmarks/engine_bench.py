@@ -23,20 +23,20 @@ import jax
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.data.synthetic import make_batch_for
-from repro.fed import runtime
+from repro.fed.api import CompressionSpec, FedSpec, build_trainer
 
 
-def _bench_round(cfg, model, fcfg, iters):
-    state = runtime.init_state(model, jax.random.PRNGKey(0), fcfg)
-    step = jax.jit(runtime.make_train_step(model, fcfg))
+def _bench_round(cfg, model, spec, iters):
+    trainer = build_trainer(model, spec)
+    state = trainer.init(jax.random.PRNGKey(0))
     shape = InputShape("bench", 32, 8, "train")
-    batch = make_batch_for(cfg, shape, n_agents=fcfg.n_agents)
+    batch = make_batch_for(cfg, shape, n_agents=spec.n_agents)
     key = jax.random.PRNGKey(1)
-    state, _ = step(state, batch, key)         # compile + warm-up
+    state, _ = trainer.step(state, batch, key)  # compile + warm-up
     jax.block_until_ready(state.x)
     t0 = time.perf_counter()
     for i in range(iters):
-        state, m = step(state, batch, jax.random.fold_in(key, i))
+        state, m = trainer.step(state, batch, jax.random.fold_in(key, i))
     jax.block_until_ready(state.x)
     return (time.perf_counter() - t0) / iters * 1e3  # ms
 
@@ -50,16 +50,18 @@ def run(quick=True):
 
     cases = [
         ("baseline", dict(), 1.0),
-        ("pallas_fused", dict(use_pallas_update=True), 1.0),
-        ("topk50", dict(compression="topk", compress_ratio=0.5), 2.0),
-        ("topk25", dict(compression="topk", compress_ratio=0.25), 4.0),
-        ("int8", dict(compression="int8"), 4.0),
+        ("pallas_fused", dict(use_pallas=True), 1.0),
+        ("topk50", dict(compression=CompressionSpec("topk", 0.5)), 2.0),
+        ("topk25", dict(compression=CompressionSpec("topk", 0.25)), 4.0),
+        ("int8", dict(compression=CompressionSpec("int8")), 4.0),
+        ("adaptive", dict(compression=CompressionSpec(
+            "adaptive_topk", ratio=0.25, energy=0.9)), 4.0),
     ]
     rows = []
     ms0 = None
     for name, kw, uplink in cases:
-        fcfg = runtime.FedConfig(**base, **kw)
-        ms = _bench_round(cfg, model, fcfg, iters)
+        spec = FedSpec(**base, **kw)
+        ms = _bench_round(cfg, model, spec, iters)
         if ms0 is None:
             ms0 = ms
         rows.append(f"engine,{name},{ms:.1f},{ms / ms0:.2f}x,"

@@ -9,7 +9,6 @@ derived bytes/FLOPs so the numbers are meaningful.
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.fedplt_update.ref import fedplt_update_ref
 from repro.kernels.flash_attention.ref import flash_attention_ref

@@ -10,8 +10,8 @@ import argparse
 import sys
 import time
 
-from benchmarks import (compression_bench, engine_bench, kernel_bench,
-                        privacy_bounds, roofline_report,
+from benchmarks import (compress_bench, compression_bench, engine_bench,
+                        kernel_bench, privacy_bounds, roofline_report,
                         table2_comparison, table3_tc_sweep,
                         table4_solvers_pp, table5_large_n,
                         table6_participation, table7_privacy_noise,
@@ -28,6 +28,7 @@ MODULES = {
     "table9": table9_ne,
     "privacy": privacy_bounds,
     "compression": compression_bench,
+    "compress_bench": compress_bench,
     "engine": engine_bench,
     "kernel": kernel_bench,
     "roofline": roofline_report,

@@ -13,9 +13,8 @@ import jax
 import numpy as np
 
 from repro.core import privacy, theory
-from repro.core.fedplt import FedPLT, FedPLTConfig
 from repro.core.problem import make_logreg_problem
-from repro.core.solvers import SolverConfig
+from repro.fed.api import FedSpec, PrivacySpec, build_trainer
 
 
 def main():
@@ -34,17 +33,17 @@ def main():
                                   n_epochs=n_epochs)
     print(f"target ({target_eps}, {delta})-ADP  =>  tau = {tau:.4f}")
 
-    rep = privacy.PrivacyReport.build(1.0, mu, tau, problem.q, gamma, K,
-                                      n_epochs, delta)
+    # the front door: tau > 0 upgrades the gd solver to DP noisy GD, and
+    # the trainer reports its own (eps, delta) position
+    trainer = build_trainer(problem, FedSpec(
+        rho=rho, gamma=gamma, n_epochs=n_epochs,
+        privacy=PrivacySpec(tau=tau, dp_init=True, delta=delta)))
+    rep = trainer.privacy_report(K)
     print(f"achieved eps = {rep.adp_eps:.3f} at Renyi order "
           f"{rep.rdp_order:.1f}; ceiling as K*Ne->inf: "
           f"{rep.eps_ceiling:.3f}")
 
-    algo = FedPLT(problem, FedPLTConfig(
-        rho=rho, dp_init=True,
-        solver=SolverConfig(name="noisy_gd", n_epochs=n_epochs, tau=tau,
-                            step_size=gamma)))
-    state, crit = algo.run(jax.random.PRNGKey(0), K)
+    state, crit = trainer.run(jax.random.PRNGKey(0), K)
     crit = np.asarray(crit)
 
     bound = theory.corollary1_bound(K, mu, L, rho, gamma, n_epochs, tau,

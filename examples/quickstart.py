@@ -5,6 +5,11 @@ Reproduces the core claims in ~30 seconds on CPU:
   2. partial participation,
   3. comparison against FedAvg's drift plateau.
 
+Everything goes through the front door: a :class:`repro.fed.api.FedSpec`
+plus :func:`repro.fed.api.build_trainer` -- the same three lines drive
+the dense paper problems here and model-scale training in
+``examples/train_lm_federated.py``.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -12,10 +17,9 @@ import jax
 import numpy as np
 
 from repro.core.baselines import make_fedavg
-from repro.core.fedplt import FedPLT, FedPLTConfig
 from repro.core.metrics import hitting_round
 from repro.core.problem import make_logreg_problem
-from repro.core.solvers import SolverConfig
+from repro.fed.api import FedSpec, build_trainer
 
 
 def main():
@@ -25,18 +29,16 @@ def main():
           f"L={problem.smoothness():.2f}")
 
     # --- Fed-PLT, 5 local epochs, full participation ----------------------
-    algo = FedPLT(problem, FedPLTConfig(
-        rho=1.0, solver=SolverConfig(name="gd", n_epochs=5)))
-    state, crit = algo.run(jax.random.PRNGKey(0), 200)
+    trainer = build_trainer(problem, FedSpec(rho=1.0, n_epochs=5))
+    state, crit = trainer.run(jax.random.PRNGKey(0), 200)
     crit = np.asarray(crit)
     print(f"\nFed-PLT     : criterion {crit[-1]:.2e} after 200 rounds "
           f"(threshold hit at round {hitting_round(crit)})")
 
     # --- with partial participation (50% of agents per round) -----------
-    algo_pp = FedPLT(problem, FedPLTConfig(
-        rho=1.0, participation=0.5,
-        solver=SolverConfig(name="gd", n_epochs=5)))
-    _, crit_pp = algo_pp.run(jax.random.PRNGKey(0), 400)
+    trainer_pp = build_trainer(
+        problem, FedSpec(rho=1.0, n_epochs=5, participation=0.5))
+    _, crit_pp = trainer_pp.run(jax.random.PRNGKey(0), 400)
     crit_pp = np.asarray(crit_pp)
     print(f"Fed-PLT 50% : criterion {crit_pp[-1]:.2e} after 400 rounds "
           f"(hit at {hitting_round(crit_pp)})")
@@ -47,7 +49,7 @@ def main():
     print(f"FedAvg      : plateaus at {crit_avg[-1]:.2e} (client drift; "
           f"never reaches 1e-5)")
 
-    x_bar = algo.x_bar(state)
+    x_bar = trainer.consensus(state)
     x_star = problem.solve()
     print(f"\n||x_bar - x*|| = {np.linalg.norm(x_bar - x_star):.2e} "
           f"(exact convergence, Prop. 2)")

@@ -20,7 +20,7 @@ from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.checkpoint import save_checkpoint
 from repro.data.synthetic import fed_lm_batches
-from repro.fed import runtime
+from repro.fed.api import FedSpec, PrivacySpec, build_trainer
 from repro.models.model import build_model
 
 
@@ -48,25 +48,25 @@ def main():
         jax.eval_shape(model.init, jax.random.PRNGKey(0))))
     print(f"model: gemma2-family, {n_params/1e6:.1f}M params")
 
-    fcfg = runtime.FedConfig(
+    trainer = build_trainer(model, FedSpec(
         n_agents=args.n_agents, rho=1.0, gamma=0.1,
         n_epochs=args.n_epochs, participation=args.participation,
-        tau=args.tau, clip=1.0 if args.tau > 0 else None)
-    state = runtime.init_state(model, jax.random.PRNGKey(0), fcfg)
-    step = jax.jit(runtime.make_train_step(model, fcfg))
+        privacy=PrivacySpec(tau=args.tau,
+                            clip=1.0 if args.tau > 0 else None)))
+    state = trainer.init(jax.random.PRNGKey(0))
 
     shape = InputShape("lm", args.seq_len, args.batch, "train")
     batches = fed_lm_batches(cfg, shape, args.n_agents)
     t0 = time.time()
     for i in range(args.rounds):
-        state, metrics = step(state, next(batches),
-                              jax.random.PRNGKey(i))
+        state, metrics = trainer.step(state, next(batches),
+                                      jax.random.PRNGKey(i))
         if i % 10 == 0 or i == args.rounds - 1:
             print(f"round {i:4d} loss={float(metrics['loss']):.4f} "
                   f"part={float(metrics['participation']):.2f} "
                   f"({time.time() - t0:.0f}s)")
 
-    final = runtime.consensus_model(state)
+    final = trainer.consensus(state)
     if args.checkpoint:
         save_checkpoint(args.checkpoint, final, step=args.rounds)
         print("checkpoint saved:", args.checkpoint)

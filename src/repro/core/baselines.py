@@ -279,7 +279,6 @@ def make_proxskip(problem, gamma=0.05, p_comm=0.2):
     nominal 'round' so histories align with N_e = 1/p_comm local epochs.
     """
     N = problem.n_agents
-    data = _agent_data(problem)
 
     def run(key, n_rounds):
         steps = n_rounds  # caller scales
@@ -318,7 +317,6 @@ def make_tamuna(problem, gamma=0.05, p_comm=0.2, participation=1.0):
     (mean 1/p_comm = N_e), matching the paper's comparison protocol.
     """
     N = problem.n_agents
-    data = _agent_data(problem)
 
     def run(key, n_steps):
         x0 = jnp.zeros((N, problem.dim))

@@ -30,8 +30,10 @@ class FedPLTState(NamedTuple):
     key: jax.Array
     k: jnp.ndarray      # round counter
     # coordinator's copy of each z_i; lags z by the never-transmitted
-    # residual when the exchange is compressed (== z otherwise)
-    t: jnp.ndarray = None
+    # residual when the exchange is compressed.  None when uncompressed:
+    # the coordinator then sees z exactly and a separate copy would just
+    # double z-memory.
+    t: Optional[jnp.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,19 +51,47 @@ class FedPLTConfig:
     # LOCAL moduli (mu_i, L_i) instead of the global (min mu_i, max L_i)
     uncoordinated: bool = False
     # beyond-paper: compressed z-exchange with lag-based error feedback
-    # (see repro.fed.engine.compress_increment)
-    compression: str = "none"         # none | topk | int8
+    # (see repro.fed.compress for the registry)
+    compression: str = "none"         # compressor registry name
     compress_ratio: float = 0.25      # top-k fraction kept
+    compress_energy: float = 0.95     # adaptive_topk per-agent target
     # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges (see tests)
     damping: float = 1.0
 
+    def to_spec(self, n_agents: Optional[int] = None):
+        """The equivalent :class:`repro.fed.api.FedSpec` (the front-door
+        config); ``build_trainer(problem, cfg.to_spec())`` reproduces
+        ``FedPLT(problem, cfg)`` bit-for-bit."""
+        from repro.fed import api
+
+        s = self.solver
+        # the legacy dense solvers only read tau under name="noisy_gd"
+        # (a gd config with tau set ran noiseless); drop the ignored tau
+        # so the spec's tau>0 -> noisy_gd upgrade cannot change behavior
+        tau = s.tau if s.name == "noisy_gd" else 0.0
+        return api.FedSpec(
+            n_agents=n_agents, rho=self.rho,
+            participation=self.participation, damping=self.damping,
+            solver=s.name, n_epochs=s.n_epochs, gamma=s.step_size,
+            mu=self.mu, L=self.L, batch_size=self.batch_size,
+            uncoordinated=self.uncoordinated, prox_h=self.prox_h,
+            privacy=api.PrivacySpec(tau=tau, clip=s.clip,
+                                    dp_init=self.dp_init),
+            compression=api.CompressionSpec(
+                name=self.compression, ratio=self.compress_ratio,
+                energy=self.compress_energy))
+
 
 class FedPLT:
-    """Paper-faithful Fed-PLT on a vectorized federated problem."""
+    """Paper-faithful Fed-PLT on a vectorized federated problem.
 
-    def __init__(self, problem, config: FedPLTConfig):
+    ``prox_h`` overrides the coordinator regularizer resolved from
+    ``config.prox_h`` (used by the front door to supply registry proxes
+    with bound kwargs, e.g. weight decay)."""
+
+    def __init__(self, problem, config: FedPLTConfig, prox_h=None):
         self.problem = problem
         self.cfg = config
         self.mu = config.mu if config.mu is not None else problem.strong_convexity()
@@ -76,12 +106,14 @@ class FedPLT:
             N = problem.n_agents
             self.mu_i = jnp.full((N,), self.mu)
             self.L_i = jnp.full((N,), self.L)
-        self.prox_h = prox_lib.make_prox(config.prox_h)
+        self.prox_h = (prox_h if prox_h is not None
+                       else prox_lib.make_prox(config.prox_h))
         self._ecfg = engine.RoundConfig(
             n_agents=problem.n_agents, rho=config.rho,
             participation=config.participation, damping=config.damping,
             compression=config.compression,
-            compress_ratio=config.compress_ratio)
+            compress_ratio=config.compress_ratio,
+            compress_energy=config.compress_energy)
         self._round = jax.jit(self._round_impl)
 
     # ------------------------------------------------------------------
@@ -93,8 +125,11 @@ class FedPLT:
             x0 = std * jax.random.normal(k_init, (N, n))
         else:
             x0 = jnp.zeros((N, n))
+        # t (the coordinator's copy) is only materialized when the
+        # exchange is compressed; uncompressed it would double z-memory
         return FedPLTState(x=x0, z=x0, y=jnp.zeros(n), key=k_state,
-                           k=jnp.zeros((), jnp.int32), t=x0)
+                           k=jnp.zeros((), jnp.int32),
+                           t=x0 if self._ecfg.compressed else None)
 
     # ------------------------------------------------------------------
     def _fgrad(self, data, w, key):
@@ -128,11 +163,14 @@ class FedPLT:
         return w, None
 
     def _round_impl(self, state: FedPLTState) -> FedPLTState:
-        res = engine.round_step(self._ecfg, state.x, state.z, state.t,
+        compressed = self._ecfg.compressed
+        t = state.t if compressed else state.z
+        res = engine.round_step(self._ecfg, state.x, state.z, t,
                                 state.key, self._local_solver,
                                 prox_h=self.prox_h)
         return FedPLTState(x=res.x, z=res.z, y=res.y, key=res.next_key,
-                           k=state.k + 1, t=res.t)
+                           k=state.k + 1,
+                           t=res.t if compressed else None)
 
     # ------------------------------------------------------------------
     def round(self, state: FedPLTState) -> FedPLTState:

@@ -13,7 +13,6 @@ q_i=250 samples, regularization ``eps * r(x)`` with
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

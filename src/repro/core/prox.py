@@ -38,6 +38,16 @@ def prox_l2sq(y: jnp.ndarray, rho: float) -> jnp.ndarray:
     return y / (1.0 + rho)
 
 
+def prox_weight_decay(y: jnp.ndarray, rho: float,
+                      weight: float = 0.0) -> jnp.ndarray:
+    """prox of h(x) = (weight/2) ||x||^2: shrinkage by 1/(1 + weight rho).
+
+    The model-scale coordinator's weight decay -- registered here so the
+    dense and model front ends share one ProxH convention (weight = 0 is
+    the identity, i.e. h = 0)."""
+    return y / (1.0 + weight * rho)
+
+
 def prox_elastic_net(y: jnp.ndarray, rho: float, l1: float = 1.0,
                      l2: float = 1.0) -> jnp.ndarray:
     """prox of h(x) = l1 ||x||_1 + (l2/2) ||x||^2."""
@@ -62,11 +72,15 @@ def make_prox(name: str, **kw) -> ProxFn:
         "zero": prox_zero,
         "l1": prox_l1,
         "l2sq": prox_l2sq,
+        "weight_decay": prox_weight_decay,
         "elastic_net": prox_elastic_net,
         "box": prox_box,
         "linf_ball": prox_linf_ball,
     }
-    fn = table[name]
+    fn = table.get(name)
+    if fn is None:
+        raise ValueError(f"unknown prox {name!r}; registered: "
+                         f"{', '.join(sorted(table))}")
     if kw:
         return lambda y, rho: fn(y, rho, **kw)
     return fn

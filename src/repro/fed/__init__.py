@@ -1,1 +1,16 @@
-"""Large-scale federated runtime: Fed-PLT over TPU meshes."""
+"""Large-scale federated runtime: Fed-PLT over TPU meshes.
+
+The front door is :mod:`repro.fed.api`:
+
+    from repro.fed import FedSpec, build_trainer
+    trainer = build_trainer(problem_or_model, FedSpec(...))
+
+re-exported here for convenience; the round engine, compressor
+registry, runtime, and sharding rules live in the submodules.
+"""
+
+from repro.fed.api import (CompressionSpec, FedSpec, FedTrainer,
+                           PrivacySpec, build_trainer, spec_from_args)
+
+__all__ = ["CompressionSpec", "FedSpec", "FedTrainer", "PrivacySpec",
+           "build_trainer", "spec_from_args"]

@@ -1,0 +1,555 @@
+"""One front door for Fed-PLT: ``FedSpec`` + ``build_trainer``.
+
+The historical configs (``FedPLTConfig`` for the dense paper
+experiments, ``FedConfig`` for model scale, plus the engine's
+``RoundConfig`` and the solvers' ``SolverConfig``) redeclared
+overlapping knobs and validated them in three different places.
+``FedSpec`` is the single composable spec:
+
+    round topology   -- n_agents / rho / participation / damping
+    local solver     -- solver / n_epochs / gamma / (mu, L)
+    privacy          -- :class:`PrivacySpec` (tau, clip, delta, dp_init)
+    uplink           -- :class:`CompressionSpec` (registry name + knobs)
+    coordinator h    -- prox_h registry name (+ weight_decay shorthand)
+
+with ONE :meth:`FedSpec.validate` owning every cross-field check, and
+:func:`build_trainer` dispatching to either front end behind one handle:
+
+    >>> spec = FedSpec(n_agents=4, gamma=0.1, n_epochs=3)
+    >>> trainer = build_trainer(problem_or_model, spec)
+    >>> state, history = trainer.run(jax.random.PRNGKey(0), 100)
+
+Both legacy configs now expose ``.to_spec()`` and stay bit-compatible:
+``build_trainer(problem, cfg.to_spec())`` reproduces
+``FedPLT(problem, cfg)`` trajectories exactly.
+
+The CLI in :mod:`repro.launch.train` is *generated* from the spec's
+dataclass fields (:func:`add_spec_args` / :func:`spec_from_args`), so a
+new knob added here -- or a new compressor registered in
+:mod:`repro.fed.compress` -- shows up as a flag without touching the
+driver.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+from repro.core import prox as prox_lib
+from repro.core.solvers import SolverConfig
+from repro.fed import engine
+from repro.fed.compress import available_compressors, get_compressor
+
+_KNOWN_SOLVERS = ("gd", "agd", "sgd", "noisy_gd")
+
+
+def _cli(flag=None, help="", arg_type=None, choices=None, default=None,
+         expose=True):
+    """Field metadata driving the generated argparse flags.
+
+    ``default`` overrides the dataclass default on the CLI only (the CLI
+    must pick concrete values where the spec allows None/derived).
+    """
+    return {"cli": {"flag": flag, "help": help, "type": arg_type,
+                    "choices": choices, "default": default,
+                    "expose": expose}}
+
+
+# ---------------------------------------------------------------------------
+# Component specs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrivacySpec:
+    """DP knobs (paper Section VI)."""
+
+    tau: float = dataclasses.field(default=0.0, metadata=_cli(
+        help="DP noise std (tau > 0 turns gd-type solvers into noisy GD)"))
+    clip: Optional[float] = dataclasses.field(default=None, metadata=_cli(
+        arg_type=float,
+        help="per-agent gradient clip threshold C (DP sensitivity)"))
+    delta: float = dataclasses.field(default=1e-5, metadata=_cli(
+        help="ADP delta for the privacy report"))
+    dp_init: bool = dataclasses.field(default=False, metadata=_cli(
+        expose=False))   # x0 ~ N(0, 2 tau^2/mu I) (Prop. 4, dense path)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """z-uplink compression; ``name`` is a :mod:`repro.fed.compress`
+    registry entry, so registered compressors are reachable by name from
+    every front end (and the generated CLI) without engine changes."""
+
+    name: str = dataclasses.field(default="none", metadata=_cli(
+        flag="--compression", help="z-uplink compressor (registry name)"))
+    ratio: float = dataclasses.field(default=0.25, metadata=_cli(
+        flag="--compress-ratio",
+        help="top-k fraction kept (floor for adaptive_topk)"))
+    energy: float = dataclasses.field(default=0.95, metadata=_cli(
+        flag="--compress-energy",
+        help="adaptive_topk per-agent energy target"))
+
+
+# ---------------------------------------------------------------------------
+# The spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FedSpec:
+    """Composable Fed-PLT specification -- the one front-door config."""
+
+    # -- round topology --------------------------------------------------
+    n_agents: Optional[int] = dataclasses.field(default=None, metadata=_cli(
+        arg_type=int, default=4,
+        help="number of agents (dense path: taken from the problem)"))
+    rho: float = dataclasses.field(default=1.0, metadata=_cli(
+        help="proximal penalty rho of Algorithm 1"))
+    participation: float = dataclasses.field(default=1.0, metadata=_cli(
+        help="per-agent Bernoulli participation probability p"))
+    damping: float = dataclasses.field(default=1.0, metadata=_cli(
+        help="Krasnosel'skii relaxation (1 = PRS, 0.5 = Douglas-Rachford)"))
+    # -- local solver ----------------------------------------------------
+    solver: str = dataclasses.field(default="gd", metadata=_cli(
+        choices=["gd", "agd", "sgd"],
+        help="local solver (tau > 0 upgrades gd-type to noisy_gd)"))
+    n_epochs: int = dataclasses.field(default=5, metadata=_cli(
+        default=3, help="local epochs N_e per round"))
+    gamma: Optional[float] = dataclasses.field(default=None, metadata=_cli(
+        arg_type=float, default=0.05,
+        help="local step size (None: optimal 2/(L_d + mu_d) from moduli; "
+             "required at model scale)"))
+    mu: Optional[float] = dataclasses.field(default=None,
+                                            metadata=_cli(expose=False))
+    L: Optional[float] = dataclasses.field(default=None,
+                                           metadata=_cli(expose=False))
+    batch_size: Optional[int] = dataclasses.field(
+        default=None, metadata=_cli(expose=False))  # dense sgd minibatch
+    uncoordinated: bool = dataclasses.field(
+        default=False, metadata=_cli(expose=False))  # Remark 1 (dense)
+    # -- coordinator regularizer h --------------------------------------
+    prox_h: str = dataclasses.field(default="zero",
+                                    metadata=_cli(expose=False))
+    weight_decay: float = dataclasses.field(default=0.0, metadata=_cli(
+        help="coordinator l2 regularizer h (prox_h='weight_decay')"))
+    # -- composed specs --------------------------------------------------
+    privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
+    compression: CompressionSpec = dataclasses.field(
+        default_factory=CompressionSpec)
+    # -- execution -------------------------------------------------------
+    use_pallas: bool = dataclasses.field(default=False, metadata=_cli(
+        flag="--use-pallas-update",
+        help="fused fedplt_update kernel for the local step"))
+
+    # ------------------------------------------------------------------
+    # Resolution
+    # ------------------------------------------------------------------
+    def solver_name(self) -> str:
+        """tau > 0 turns the gd-type solvers into DP noisy GD."""
+        if self.privacy.tau > 0.0:
+            if self.solver == "agd":
+                raise ValueError("DP noise (tau > 0) requires a gd-type "
+                                 "solver, not 'agd'")
+            if self.solver in ("gd", "sgd"):
+                return "noisy_gd"
+        return self.solver
+
+    def solver_config(self) -> SolverConfig:
+        return SolverConfig(name=self.solver_name(),
+                            n_epochs=self.n_epochs, step_size=self.gamma,
+                            tau=self.privacy.tau, clip=self.privacy.clip)
+
+    def round_config(self) -> engine.RoundConfig:
+        if self.n_agents is None:
+            raise ValueError("FedSpec.n_agents is unresolved (the dense "
+                             "path fills it from the problem; set it "
+                             "explicitly at model scale)")
+        return engine.RoundConfig(
+            n_agents=self.n_agents, rho=self.rho,
+            participation=self.participation, damping=self.damping,
+            compression=self.compression.name,
+            compress_ratio=self.compression.ratio,
+            compress_energy=self.compression.energy)
+
+    def moduli(self) -> tuple[float, Optional[float]]:
+        """(mu, L) of the local f_i for momentum resolution.  Explicit
+        values win; with ``gamma`` set (model scale) an unknown L is
+        derived as 1/gamma - 1/rho so that agd's 1/L_d step equals
+        gamma; with neither (dense path) L stays None and the problem's
+        own moduli are used."""
+        mu = self.mu if self.mu is not None else 0.0
+        if self.L is not None:
+            return mu, self.L
+        if self.gamma is None:
+            return mu, None
+        return mu, 1.0 / self.gamma - 1.0 / self.rho
+
+    def resolve_prox_h(self) -> engine.ProxH:
+        """Engine ProxH of the coordinator regularizer h; None when h = 0.
+        Every name -- including the model path's weight decay -- comes
+        from the one :func:`repro.core.prox.make_prox` registry."""
+        if self.weight_decay != 0.0:
+            return prox_lib.make_prox("weight_decay",
+                                      weight=self.weight_decay)
+        if self.prox_h == "zero":
+            return None
+        return prox_lib.make_prox(self.prox_h)
+
+    # ------------------------------------------------------------------
+    # Validation: the single home of every cross-field check
+    # ------------------------------------------------------------------
+    def validate(self) -> "FedSpec":
+        """Raise ValueError on any inconsistent combination; returns self
+        so call sites can chain ``spec.validate()``."""
+        if self.n_agents is not None and self.n_agents < 1:
+            raise ValueError("n_agents must be >= 1")
+        if self.rho <= 0.0:
+            raise ValueError("rho must be positive")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")
+        if not 0.0 < self.damping <= 1.0:
+            raise ValueError("damping must be in (0, 1]")
+        if self.n_epochs < 1:
+            raise ValueError("n_epochs must be >= 1")
+        if self.gamma is not None and self.gamma <= 0.0:
+            raise ValueError("gamma must be positive")
+        p = self.privacy
+        if p.tau < 0.0:
+            raise ValueError("tau must be >= 0")
+        if p.clip is not None and p.clip <= 0.0:
+            raise ValueError("clip must be positive (clip=0 zeroes every "
+                             "gradient; use None to disable clipping)")
+        if not 0.0 < p.delta < 1.0:
+            raise ValueError("delta must be in (0, 1)")
+        name = self.solver_name()   # raises for agd + tau > 0
+        if name not in _KNOWN_SOLVERS:
+            raise ValueError(f"unknown solver {name!r}; known: "
+                             f"{', '.join(_KNOWN_SOLVERS)}")
+        get_compressor(self.compression.name)  # unknown-compressor error
+        if not 0.0 < self.compression.ratio <= 1.0:
+            raise ValueError("compress ratio must be in (0, 1]")
+        if not 0.0 < self.compression.energy <= 1.0:
+            raise ValueError("compress energy must be in (0, 1]")
+        if self.weight_decay < 0.0:
+            raise ValueError("weight_decay must be >= 0")
+        if self.weight_decay != 0.0 and self.prox_h not in (
+                "zero", "weight_decay"):
+            raise ValueError("weight_decay and a non-trivial prox_h are "
+                             "mutually exclusive (one coordinator h)")
+        self.resolve_prox_h()       # unknown prox name -> KeyError
+        if name == "agd":
+            mu, L = self.moduli()
+            if L is not None and L <= mu:
+                if self.L is not None:
+                    raise ValueError(f"agd momentum needs L > mu (got "
+                                     f"L={L:.4g}, mu={mu:.4g})")
+                raise ValueError(
+                    f"agd momentum needs L > mu; derived L={L:.4g} from "
+                    f"gamma={self.gamma} (needs gamma < rho/(1 + mu*rho) "
+                    f"= {self.rho / (1.0 + mu * self.rho):.4g}) -- pass "
+                    f"an explicit L in the spec")
+        return self
+
+    # ------------------------------------------------------------------
+    # Legacy-config bridge (kept bit-compatible)
+    # ------------------------------------------------------------------
+    def to_dense_config(self):
+        """The :class:`repro.core.fedplt.FedPLTConfig` this spec denotes
+        (inverse of ``FedPLTConfig.to_spec``, used by the dense trainer
+        so trajectories stay bit-identical to the legacy front end)."""
+        from repro.core.fedplt import FedPLTConfig
+
+        return FedPLTConfig(
+            rho=self.rho,
+            solver=self.solver_config(),
+            participation=self.participation,
+            prox_h=self.prox_h,
+            batch_size=self.batch_size,
+            mu=self.mu, L=self.L,
+            dp_init=self.privacy.dp_init,
+            uncoordinated=self.uncoordinated,
+            compression=self.compression.name,
+            compress_ratio=self.compression.ratio,
+            compress_energy=self.compression.energy,
+            damping=self.damping)
+
+
+def as_spec(cfg: Any) -> FedSpec:
+    """Normalize a FedSpec / FedPLTConfig / FedConfig to a FedSpec."""
+    if isinstance(cfg, FedSpec):
+        return cfg
+    to_spec = getattr(cfg, "to_spec", None)
+    if to_spec is None:
+        raise TypeError(f"cannot interpret {type(cfg).__name__} as a "
+                        f"FedSpec (no .to_spec())")
+    return to_spec()
+
+
+# ---------------------------------------------------------------------------
+# Privacy accounting from the spec
+# ---------------------------------------------------------------------------
+
+def privacy_report(spec: Any, n_rounds: int, local_dataset_size: int,
+                   delta: Optional[float] = None, *,
+                   mu: Optional[float] = None):
+    """Position a DP run on the paper's (eps, delta) map (Prop. 4 +
+    Lemma 5 via :mod:`repro.core.privacy`).
+
+    ``mu`` is the strong-convexity modulus the accountant charges
+    against: the caller's problem modulus on the dense path, and by
+    default the curvature the algorithm optimizes against at model scale
+    (the proximal term gives d_i strong convexity >= weight_decay +
+    1/rho, valid even for nonconvex local losses).
+
+    Sensitivity convention: ``core.privacy`` expects the paper's
+    Assumption-3 L (a PER-SAMPLE gradient bound; the bound divides by
+    q^2).  The runtime clips the per-agent MEAN gradient at C, so
+    swapping one of q samples can move the clipped gradient by up to 2C
+    -- the per-sample-equivalent bound is L = C * q.  An unclipped run
+    assumes per-sample bound L = 1.0 and a loud caveat is on the caller.
+    """
+    from repro.core.privacy import PrivacyReport
+
+    spec = as_spec(spec).validate()
+    p = spec.privacy
+    if p.tau <= 0.0:
+        raise ValueError("privacy_report requires tau > 0")
+    mu_eff = mu if mu is not None else spec.weight_decay + 1.0 / spec.rho
+    if mu_eff <= 0.0:
+        raise ValueError("privacy accounting requires a strongly convex "
+                         "local objective (mu > 0)")
+    gamma = spec.gamma
+    if gamma is None:
+        m, L = spec.moduli()
+        if L is None:
+            raise ValueError("privacy_report needs gamma (or explicit "
+                             "moduli to derive it)")
+        gamma = spec.solver_config().resolve_step_size(
+            m + 1.0 / spec.rho, L + 1.0 / spec.rho)
+    sensitivity = (p.clip * local_dataset_size
+                   if p.clip is not None else 1.0)
+    return PrivacyReport.build(
+        sensitivity=sensitivity, mu=mu_eff, tau=p.tau,
+        q=local_dataset_size, gamma=gamma, K=n_rounds,
+        n_epochs=spec.n_epochs, delta=delta if delta is not None
+        else p.delta)
+
+
+# ---------------------------------------------------------------------------
+# The trainer handle
+# ---------------------------------------------------------------------------
+
+class FedTrainer:
+    """Uniform handle over both Fed-PLT front ends.
+
+    ``init / step / run / consensus / privacy_report`` mean the same
+    thing on the dense paper problems and at model scale; only ``step``
+    / ``run`` arity differs (model-scale rounds consume a batch).
+    """
+
+    spec: FedSpec
+
+    def init(self, key: jax.Array):
+        raise NotImplementedError
+
+    def step(self, state, *args):
+        raise NotImplementedError
+
+    def run(self, key: jax.Array, n_rounds: int, *args):
+        raise NotImplementedError
+
+    def consensus(self, state):
+        raise NotImplementedError
+
+    def privacy_report(self, n_rounds: int,
+                       local_dataset_size: Optional[int] = None,
+                       delta: Optional[float] = None):
+        raise NotImplementedError
+
+
+class DenseTrainer(FedTrainer):
+    """:class:`repro.core.fedplt.FedPLT` behind the FedTrainer handle --
+    trajectories are bit-identical to the legacy front end."""
+
+    def __init__(self, problem, spec: FedSpec):
+        if spec.n_agents not in (None, problem.n_agents):
+            raise ValueError(f"spec.n_agents={spec.n_agents} != "
+                             f"problem.n_agents={problem.n_agents}")
+        self.spec = dataclasses.replace(spec, n_agents=problem.n_agents)
+        # the spec with the problem's actual curvature filled in --
+        # validation and privacy accounting both need the real moduli
+        self._resolved = dataclasses.replace(
+            self.spec,
+            mu=spec.mu if spec.mu is not None
+            else float(problem.strong_convexity()),
+            L=spec.L if spec.L is not None
+            else float(problem.smoothness())).validate()
+        from repro.core.fedplt import FedPLT
+
+        prox_override = (self.spec.resolve_prox_h()
+                         if self.spec.weight_decay != 0.0 else None)
+        self.problem = problem
+        self.algo = FedPLT(problem, self.spec.to_dense_config(),
+                           prox_h=prox_override)
+
+    def init(self, key: jax.Array):
+        return self.algo.init(key)
+
+    def step(self, state):
+        """One Fed-PLT round (jitted)."""
+        return self.algo.round(state)
+
+    def run(self, key: jax.Array, n_rounds: int):
+        """Run from a fresh init; returns (state, criterion_history)."""
+        return self.algo.run(key, n_rounds)
+
+    def consensus(self, state):
+        return self.algo.x_bar(state)
+
+    def privacy_report(self, n_rounds: int,
+                       local_dataset_size: Optional[int] = None,
+                       delta: Optional[float] = None):
+        q = (local_dataset_size if local_dataset_size is not None
+             else self.problem.q)
+        return privacy_report(self._resolved, n_rounds, q, delta,
+                              mu=self.algo.mu if self.algo.mu > 0
+                              else None)
+
+
+class ModelTrainer(FedTrainer):
+    """:mod:`repro.fed.runtime` behind the FedTrainer handle."""
+
+    def __init__(self, model, spec: FedSpec, use_remat: bool = True):
+        if spec.n_agents is None:
+            raise ValueError("FedSpec.n_agents is required at model scale")
+        if spec.gamma is None:
+            raise ValueError("FedSpec.gamma is required at model scale "
+                             "(the local moduli are unknown)")
+        from repro.fed import runtime
+
+        self.spec = spec.validate()
+        self.model = model
+        self._runtime = runtime
+        self._step = jax.jit(
+            runtime.make_train_step(model, spec, use_remat=use_remat))
+
+    def init(self, key: jax.Array):
+        return self._runtime.init_state(self.model, key, self.spec)
+
+    def step(self, state, batch, key: jax.Array):
+        """One jitted Fed-PLT round on an agent-stacked batch."""
+        return self._step(state, batch, key)
+
+    def run(self, key: jax.Array, n_rounds: int, batches):
+        """Run from a fresh init.  ``batches`` is either a callable
+        ``i -> batch`` or an iterable of per-round batches; returns
+        ``(state, metrics_history)``."""
+        state = self.init(key)
+        if callable(batches):
+            get = batches
+        else:
+            it = iter(batches)
+            get = lambda i: next(it)  # noqa: E731
+        history = []
+        for i in range(n_rounds):
+            state, m = self.step(state, get(i), jax.random.fold_in(key, i))
+            history.append({k: float(v) for k, v in m.items()})
+        return state, history
+
+    def consensus(self, state):
+        return self._runtime.consensus_model(state)
+
+    def privacy_report(self, n_rounds: int,
+                       local_dataset_size: Optional[int] = None,
+                       delta: Optional[float] = None):
+        if local_dataset_size is None:
+            raise ValueError("model-scale privacy_report needs the local "
+                             "dataset size q_i")
+        return privacy_report(self.spec, n_rounds, local_dataset_size,
+                              delta)
+
+
+def build_trainer(problem_or_model, spec: Any) -> FedTrainer:
+    """The front door: a unified trainer over both Fed-PLT paths.
+
+    Dense convex problems (``local_loss`` + ``n_agents``; see
+    :mod:`repro.core.problem`) get the paper-faithful ``FedPLT`` engine
+    front end; model objects (``init`` + ``loss_fn``; see
+    :mod:`repro.models.model`) get the model-scale runtime.  ``spec``
+    may be a :class:`FedSpec` or any legacy config with ``.to_spec()``.
+    """
+    spec = as_spec(spec)
+    if hasattr(problem_or_model, "local_loss") and \
+            hasattr(problem_or_model, "n_agents"):
+        return DenseTrainer(problem_or_model, spec)
+    if hasattr(problem_or_model, "loss_fn") and \
+            hasattr(problem_or_model, "init"):
+        return ModelTrainer(problem_or_model, spec)
+    raise TypeError(
+        f"cannot build a trainer for {type(problem_or_model).__name__}: "
+        f"expected a dense problem (local_loss/n_agents) or a model "
+        f"(init/loss_fn)")
+
+
+# ---------------------------------------------------------------------------
+# CLI generation: argparse flags derived from the spec fields
+# ---------------------------------------------------------------------------
+
+def _cli_entries():
+    """(owner, field, flag, dest, argparse-kwargs) for every exposed
+    spec field, derived from the dataclass metadata -- the CLI cannot
+    drift from the spec because it is generated from it."""
+    out = []
+    for owner in ("spec", "privacy", "compression"):
+        cls = {"spec": FedSpec, "privacy": PrivacySpec,
+               "compression": CompressionSpec}[owner]
+        for f in dataclasses.fields(cls):
+            if dataclasses.is_dataclass(f.type) or f.name in (
+                    "privacy", "compression"):
+                continue
+            meta = f.metadata.get("cli")
+            if meta is None or not meta["expose"]:
+                continue
+            flag = meta["flag"] or "--" + f.name.replace("_", "-")
+            dest = flag.lstrip("-").replace("-", "_")
+            default = (meta["default"] if meta["default"] is not None
+                       else f.default)
+            kwargs = dict(default=default, help=meta["help"])
+            if f.type in ("bool", bool):
+                kwargs["action"] = "store_true"
+            else:
+                kwargs["type"] = meta["type"] or type(default)
+                if meta["choices"]:
+                    kwargs["choices"] = meta["choices"]
+            if f.name == "name" and owner == "compression":
+                kwargs["choices"] = available_compressors()
+            out.append((owner, f.name, flag, dest, kwargs))
+    return out
+
+
+def add_spec_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Add one flag per exposed :class:`FedSpec` field (fed mode)."""
+    for _, _, flag, _, kwargs in _cli_entries():
+        ap.add_argument(flag, **kwargs)
+    return ap
+
+
+def spec_from_args(args) -> FedSpec:
+    """Build a :class:`FedSpec` from parsed args (or an argv list).
+
+    Accepts either the ``argparse.Namespace`` of a parser that went
+    through :func:`add_spec_args`, or a raw argv list, e.g.
+    ``spec_from_args(["--tau", "0.1", "--solver", "gd"])``.
+    """
+    if not isinstance(args, argparse.Namespace):
+        ap = argparse.ArgumentParser(prog="fedspec")
+        add_spec_args(ap)
+        args = ap.parse_args(list(args))
+    buckets = {"spec": {}, "privacy": {}, "compression": {}}
+    for owner, name, _, dest, _ in _cli_entries():
+        buckets[owner][name] = getattr(args, dest)
+    return FedSpec(privacy=PrivacySpec(**buckets["privacy"]),
+                   compression=CompressionSpec(**buckets["compression"]),
+                   **buckets["spec"])

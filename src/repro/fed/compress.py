@@ -1,0 +1,136 @@
+"""Pluggable per-agent uplink compressors for the Fed-PLT z-exchange.
+
+A compressor maps the flattened per-leaf increment ``dz`` of shape
+``(N, m)`` (one row per agent) to the values actually transmitted; the
+round engine (:mod:`repro.fed.engine`) advances the coordinator's lagged
+copy ``t`` by exactly what was transmitted, so the never-transmitted
+residual is the error-feedback memory.  Top-k / int8 scales are per
+agent per leaf -- what an actual uplink would quantize.
+
+New compressors plug in through :func:`register_compressor`::
+
+    @register_compressor("sign")
+    def compress_sign(dz, cfg):
+        scale = jnp.mean(jnp.abs(dz), axis=-1, keepdims=True)
+        return jnp.sign(dz) * scale
+
+and are immediately reachable from every front end (``FedSpec``,
+``FedPLTConfig``, ``FedConfig``, the train CLI) by name -- the engine
+dispatches through this registry, never through hard-coded branches.
+
+The registered function receives the :class:`repro.fed.engine.RoundConfig`
+(duck-typed: it only reads ``compress_ratio`` / ``compress_energy``) and
+must preserve shape and dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+# (dz_rows (N, m), round_cfg) -> transmitted rows (N, m)
+CompressFn = Callable[[jnp.ndarray, Any], jnp.ndarray]
+
+_REGISTRY: Dict[str, CompressFn] = {}
+
+
+def register_compressor(name: str) -> Callable[[CompressFn], CompressFn]:
+    """Decorator registering a per-agent row compressor under ``name``."""
+
+    def deco(fn: CompressFn) -> CompressFn:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_compressor(name: str) -> CompressFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor {name!r}; registered: "
+            f"{', '.join(available_compressors())}") from None
+
+
+def available_compressors() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def compress_rows(dz: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Dispatch the configured compressor on a flattened (N, m) increment."""
+    return get_compressor(cfg.compression)(dz, cfg)
+
+
+def compress_increment(dz: Any, cfg) -> Any:
+    """Apply the configured compressor leaf-wise (each leaf is flattened
+    to (N, m): top-k / int8 scales are per agent per leaf, which is what
+    an actual uplink would quantize)."""
+    fn = get_compressor(cfg.compression)
+
+    def leaf(l):
+        return fn(l.reshape(l.shape[0], -1), cfg).reshape(l.shape)
+
+    return jax.tree_util.tree_map(leaf, dz)
+
+
+# ---------------------------------------------------------------------------
+# Built-in compressors
+# ---------------------------------------------------------------------------
+
+@register_compressor("none")
+def compress_none(dz: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Exact exchange: transmit the full-precision increment."""
+    del cfg
+    return dz
+
+
+@register_compressor("topk")
+def compress_topk(dz: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Keep the ``compress_ratio`` fraction of largest-magnitude entries
+    per agent (same k for every agent)."""
+    k = max(1, int(cfg.compress_ratio * dz.shape[-1]))
+
+    def topk_row(row):
+        thresh = jnp.sort(jnp.abs(row))[-k]
+        return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
+
+    return jax.vmap(topk_row)(dz)
+
+
+@register_compressor("int8")
+def compress_int8(dz: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Symmetric per-agent int8 quantization (scale = max|dz| / 127)."""
+    del cfg
+    scale = jnp.max(jnp.abs(dz), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.round(dz / scale).astype(jnp.int8)
+    return q.astype(dz.dtype) * scale
+
+
+@register_compressor("adaptive_topk")
+def compress_adaptive_topk(dz: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Per-agent ADAPTIVE-ratio top-k (ROADMAP follow-up): each agent
+    keeps the smallest k_i whose top coordinates capture a
+    ``compress_energy`` fraction of its increment's l2 energy, floored at
+    ``compress_ratio * m``.  Agents with concentrated increments (a few
+    hot coordinates -- e.g. embedding rows they actually touched)
+    transmit far fewer values than agents with diffuse updates, instead
+    of everyone paying one global worst-case k."""
+    m = dz.shape[-1]
+    k_floor = max(1, int(cfg.compress_ratio * m))
+
+    def row_fn(row):
+        energy = jnp.square(jnp.abs(row))
+        desc = jnp.sort(energy)[::-1]
+        cum = jnp.cumsum(desc)
+        total = jnp.maximum(cum[-1], 1e-30)
+        # smallest prefix capturing the energy target, never below the floor
+        k = jnp.sum(cum < cfg.compress_energy * total) + 1
+        k = jnp.clip(k, k_floor, m)
+        thresh = jnp.take(jnp.sort(jnp.abs(row)), m - k)
+        return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
+
+    return jax.vmap(row_fn)(dz)

@@ -34,6 +34,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.fed.compress import compress_increment, get_compressor
+
 tree_map = jax.tree_util.tree_map
 
 # (x_stack, v_stack, key) -> (w_stack, aux); aux may be None.  The solver
@@ -58,8 +60,14 @@ class RoundConfig:
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges.
     damping: float = 1.0
-    compression: str = "none"         # none | topk | int8
-    compress_ratio: float = 0.25      # top-k fraction kept
+    # compressor name in the repro.fed.compress registry
+    # (none | topk | int8 | adaptive_topk | anything registered)
+    compression: str = "none"
+    compress_ratio: float = 0.25      # top-k fraction kept (floor for adaptive)
+    compress_energy: float = 0.95     # adaptive_topk per-agent energy target
+
+    def __post_init__(self):
+        get_compressor(self.compression)  # fail fast on unknown names
 
     @property
     def compressed(self) -> bool:
@@ -120,37 +128,9 @@ def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
-# Compressed z-exchange
-# ---------------------------------------------------------------------------
-
-def _compress_rows(dz: jnp.ndarray, cfg: RoundConfig) -> jnp.ndarray:
-    """Per-agent compressor on a flattened (N, m) increment."""
-    if cfg.compression == "topk":
-        k = max(1, int(cfg.compress_ratio * dz.shape[-1]))
-
-        def topk_row(row):
-            thresh = jnp.sort(jnp.abs(row))[-k]
-            return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
-
-        return jax.vmap(topk_row)(dz)
-    if cfg.compression == "int8":
-        scale = jnp.max(jnp.abs(dz), axis=-1, keepdims=True) / 127.0
-        scale = jnp.maximum(scale, 1e-12)
-        q = jnp.round(dz / scale).astype(jnp.int8)
-        return q.astype(dz.dtype) * scale
-    return dz
-
-
-def compress_increment(dz: Any, cfg: RoundConfig) -> Any:
-    """Apply the per-agent compressor leaf-wise (each leaf is flattened to
-    (N, m): top-k / int8 scales are per agent per leaf, which is what an
-    actual uplink would quantize)."""
-    def leaf(l):
-        return _compress_rows(l.reshape(l.shape[0], -1), cfg).reshape(l.shape)
-
-    return tree_map(leaf, dz)
-
-
+# Compressed z-exchange: the compressor itself lives in the
+# repro.fed.compress registry; `compress_increment` is re-exported above
+# so front ends keep one import site.
 # ---------------------------------------------------------------------------
 # One round
 # ---------------------------------------------------------------------------

@@ -30,8 +30,9 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.solvers import SolverConfig
 from repro.fed import engine
+from repro.fed.api import FedSpec, as_spec
+from repro.fed.api import privacy_report as _spec_privacy_report
 from repro.models.model import Model
 
 
@@ -46,6 +47,14 @@ class FedState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
+    """Thin legacy shim over :class:`repro.fed.api.FedSpec`.
+
+    Kept for existing call sites; every runtime entry point normalizes
+    it via :meth:`to_spec`, and all validation lives in
+    ``FedSpec.validate`` -- prefer constructing a ``FedSpec`` (or
+    ``api.build_trainer``) directly in new code.
+    """
+
     n_agents: int = 16
     rho: float = 1.0
     gamma: float = 0.05
@@ -61,89 +70,59 @@ class FedConfig:
     # that agd's 1/L_d step equals gamma
     mu: float = 0.0
     L: float = 0.0
-    compression: str = "none"        # none | topk | int8 (z uplink)
+    compression: str = "none"        # z-uplink compressor registry name
     compress_ratio: float = 0.25
     damping: float = 1.0             # Krasnosel'skii relaxation
 
-    def solver_name(self) -> str:
-        """tau > 0 turns the gd-type solvers into DP noisy GD."""
-        if self.tau > 0.0:
-            if self.solver == "agd":
-                raise ValueError("DP noise (tau > 0) requires a gd-type "
-                                 "solver, not 'agd'")
-            return "noisy_gd"
-        return self.solver
+    def to_spec(self) -> FedSpec:
+        from repro.fed.api import CompressionSpec, PrivacySpec
 
-    def solver_config(self) -> SolverConfig:
-        return SolverConfig(name=self.solver_name(),
-                            n_epochs=self.n_epochs, step_size=self.gamma,
-                            tau=self.tau, clip=self.clip)
-
-    def moduli(self) -> tuple[float, float]:
-        """(mu, L) of the local f_i for momentum resolution.  gd-type
-        solvers step with the configured gamma regardless; when L is
-        unknown we pick L_d = 1/gamma so that agd's 1/L_d step also
-        equals gamma.  That inversion needs gamma < rho/(1 + mu*rho);
-        agd with a larger gamma must pass L explicitly (enforced in
-        :func:`make_train_step`)."""
-        if self.L > 0.0:
-            return self.mu, self.L
-        return self.mu, 1.0 / self.gamma - 1.0 / self.rho
-
-    def round_config(self) -> engine.RoundConfig:
-        return engine.RoundConfig(
+        return FedSpec(
             n_agents=self.n_agents, rho=self.rho,
             participation=self.participation, damping=self.damping,
-            compression=self.compression,
-            compress_ratio=self.compress_ratio)
+            solver=self.solver, n_epochs=self.n_epochs, gamma=self.gamma,
+            mu=self.mu if self.mu != 0.0 else None,
+            L=self.L if self.L > 0.0 else None,
+            weight_decay=self.weight_decay,
+            privacy=PrivacySpec(tau=self.tau, clip=self.clip),
+            compression=CompressionSpec(name=self.compression,
+                                        ratio=self.compress_ratio),
+            use_pallas=self.use_pallas_update)
 
 
-def init_state(model: Model, key: jax.Array, fcfg: FedConfig) -> FedState:
+def init_state(model: Model, key: jax.Array, fcfg) -> FedState:
+    """``fcfg`` may be a legacy :class:`FedConfig` or a ``FedSpec``."""
+    spec = as_spec(fcfg)
     params = model.init(key)
     stacked = jax.tree_util.tree_map(
-        lambda p: jnp.broadcast_to(p, (fcfg.n_agents,) + p.shape), params)
-    t = stacked if fcfg.compression != "none" else None
+        lambda p: jnp.broadcast_to(p, (spec.n_agents,) + p.shape), params)
+    t = stacked if spec.compression.name != "none" else None
     return FedState(x=stacked, z=stacked, step=jnp.zeros((), jnp.int32),
                     t=t)
 
 
-def _prox_h(fcfg: FedConfig):
-    """Leaf-wise engine ProxH of h = (wd/2)||.||^2 (Lemma 6); None when
-    weight_decay = 0 (smooth problems, h = 0).  The engine calls it with
-    rho_eff = rho / N."""
-    if fcfg.weight_decay == 0.0:
-        return None
-    return lambda yl, rho_eff: yl / (1.0 + fcfg.weight_decay * rho_eff)
-
-
-def _coordinator_prox(zbar, fcfg: FedConfig):
+def _coordinator_prox(zbar, fcfg):
     """Apply the coordinator prox to an agent-mean pytree (convenience /
-    test hook; delegates to the same :func:`_prox_h` the engine uses)."""
-    prox = _prox_h(fcfg)
+    test hook; delegates to the same registry ProxH the engine uses)."""
+    spec = as_spec(fcfg)
+    prox = spec.resolve_prox_h()
     if prox is None:
         return zbar
-    rho_eff = fcfg.rho / fcfg.n_agents
+    rho_eff = spec.rho / spec.n_agents
     return jax.tree_util.tree_map(lambda t: prox(t, rho_eff), zbar)
 
 
-def make_train_step(model: Model, fcfg: FedConfig, use_remat: bool = True):
+def make_train_step(model: Model, fcfg, use_remat: bool = True):
     """Returns ``step(state, batch, key) -> (state, metrics)``.
 
+    ``fcfg`` may be a legacy :class:`FedConfig` or a ``FedSpec``;
     ``batch`` leaves carry a leading agent axis: tokens (A, b, S), etc.
     """
-    scfg = fcfg.solver_config()
-    ecfg = fcfg.round_config()
-    prox_h = _prox_h(fcfg)
-    mu, L = fcfg.moduli()
-    if fcfg.clip is not None and fcfg.clip <= 0.0:
-        raise ValueError("FedConfig.clip must be positive (clip=0 zeroes "
-                         "every gradient; use None to disable clipping)")
-    if scfg.name == "agd" and L <= mu:
-        raise ValueError(
-            f"agd momentum needs L > mu; derived L={L:.4g} from "
-            f"gamma={fcfg.gamma} (needs gamma < rho/(1 + mu*rho) = "
-            f"{fcfg.rho / (1.0 + fcfg.mu * fcfg.rho):.4g}) -- pass an "
-            f"explicit L in FedConfig")
+    spec = as_spec(fcfg).validate()   # the ONE validation site
+    scfg = spec.solver_config()
+    ecfg = spec.round_config()
+    prox_h = spec.resolve_prox_h()
+    mu, L = spec.moduli()
 
     def per_agent_loss(params_i, batch_i):
         return model.loss_fn(params_i, batch=batch_i, remat=use_remat)
@@ -159,8 +138,8 @@ def make_train_step(model: Model, fcfg: FedConfig, use_remat: bool = True):
             return g, losses
 
         local_solver = engine.make_local_solver(
-            scfg, fgrad, fcfg.rho, mu, L,
-            use_pallas=fcfg.use_pallas_update, has_aux=True)
+            scfg, fgrad, spec.rho, mu, L,
+            use_pallas=spec.use_pallas, has_aux=True)
 
         t = state.t if ecfg.compressed else state.z
         res = engine.round_step(ecfg, state.x, state.z, t, rkey,
@@ -182,33 +161,16 @@ def consensus_model(state: FedState):
     return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), state.x)
 
 
-def privacy_report(fcfg: FedConfig, n_rounds: int, local_dataset_size: int,
+def privacy_report(fcfg, n_rounds: int, local_dataset_size: int,
                    delta: float = 1e-5):
-    """Position a DP training run on the paper's (eps, delta) map
-    (Prop. 4 + Lemma 5 via :mod:`repro.core.privacy`).
+    """Position a DP training run on the paper's (eps, delta) map.
 
-    At model scale the local losses are nonconvex, so we account with the
-    curvature the algorithm actually optimizes against: the proximal term
-    gives d_i strong convexity >= weight_decay + 1/rho.
-
-    Sensitivity convention: ``core.privacy`` expects the paper's
-    Assumption-3 L (a PER-SAMPLE gradient bound; the bound divides by
-    q^2).  The runtime clips the per-agent MEAN gradient at C, so
-    swapping one of q samples can move the clipped gradient by up to 2C
-    -- the per-sample-equivalent bound is L = C * q.  An unclipped run
-    assumes per-sample bound L = 1.0 and a loud caveat is on the caller.
+    Thin delegate to :func:`repro.fed.api.privacy_report` (one
+    accountant for both front ends); at model scale the local losses are
+    nonconvex, so it accounts with the curvature the algorithm actually
+    optimizes against (the proximal term gives d_i strong convexity
+    >= weight_decay + 1/rho).  See the api docstring for the
+    sensitivity convention.
     """
-    from repro.core.privacy import PrivacyReport
-
-    if fcfg.tau <= 0.0:
-        raise ValueError("privacy_report requires tau > 0")
-    if fcfg.clip is not None and fcfg.clip <= 0.0:
-        raise ValueError("clip must be positive (clip=0 zeroes every "
-                         "gradient)")
-    mu_eff = fcfg.weight_decay + 1.0 / fcfg.rho
-    sensitivity = (fcfg.clip * local_dataset_size
-                   if fcfg.clip is not None else 1.0)
-    return PrivacyReport.build(
-        sensitivity=sensitivity, mu=mu_eff, tau=fcfg.tau,
-        q=local_dataset_size, gamma=fcfg.gamma, K=n_rounds,
-        n_epochs=fcfg.n_epochs, delta=delta)
+    return _spec_privacy_report(as_spec(fcfg), n_rounds,
+                                local_dataset_size, delta)

@@ -17,13 +17,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.data.synthetic import make_batch_for
-from repro.fed import runtime
+from repro.fed import api
 from repro.models.model import build_model
 from repro.optim import adamw, apply_updates, momentum, sgd
 
@@ -37,30 +36,6 @@ def main():
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--n-agents", type=int, default=4)
-    ap.add_argument("--n-epochs", type=int, default=3)
-    ap.add_argument("--rho", type=float, default=1.0)
-    ap.add_argument("--gamma", type=float, default=0.05)
-    ap.add_argument("--tau", type=float, default=0.0,
-                    help="DP noise std (noisy local GD)")
-    ap.add_argument("--participation", type=float, default=1.0)
-    ap.add_argument("--solver", default="gd",
-                    choices=["gd", "agd", "sgd"],
-                    help="local solver (tau>0 upgrades gd-type to "
-                         "noisy_gd)")
-    ap.add_argument("--clip", type=float, default=None,
-                    help="per-agent gradient clip threshold (DP "
-                         "sensitivity)")
-    ap.add_argument("--weight-decay", type=float, default=0.0,
-                    help="coordinator l2 regularizer h")
-    ap.add_argument("--compression", default="none",
-                    choices=["none", "topk", "int8"],
-                    help="z-uplink increment compression")
-    ap.add_argument("--compress-ratio", type=float, default=0.25)
-    ap.add_argument("--use-pallas-update", action="store_true",
-                    help="fused fedplt_update kernel for the local step")
-    ap.add_argument("--delta", type=float, default=1e-5,
-                    help="ADP delta for the privacy report")
     ap.add_argument("--local-dataset-size", type=int, default=None,
                     help="smallest local dataset size q_i for the "
                          "privacy report (default: per-agent batch)")
@@ -68,7 +43,14 @@ def main():
                     choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint", default=None)
+    # every fed knob is generated from the FedSpec fields -- new spec
+    # fields / registered compressors become flags without edits here
+    api.add_spec_args(ap)
     args = ap.parse_args()
+
+    spec = api.spec_from_args(args)
+    if args.mode == "fed":
+        spec.validate()      # fail fast, before building the model
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -78,38 +60,31 @@ def main():
     key = jax.random.PRNGKey(0)
 
     if args.mode == "fed":
-        fcfg = runtime.FedConfig(
-            n_agents=args.n_agents, rho=args.rho, gamma=args.gamma,
-            n_epochs=args.n_epochs, participation=args.participation,
-            tau=args.tau, clip=args.clip, weight_decay=args.weight_decay,
-            solver=args.solver, compression=args.compression,
-            compress_ratio=args.compress_ratio,
-            use_pallas_update=args.use_pallas_update)
-        if args.tau > 0:
+        trainer = api.build_trainer(model, spec)
+        if spec.privacy.tau > 0:
             # every DP run states its (eps, delta) position up front
             # make_batch_for splits the global batch across agents
             q = args.local_dataset_size or max(1, args.batch
-                                               // args.n_agents)
-            rep = runtime.privacy_report(fcfg, args.steps, q,
-                                         delta=args.delta)
-            caveat = "" if args.clip is not None else \
+                                               // spec.n_agents)
+            rep = trainer.privacy_report(args.steps, q)
+            caveat = "" if spec.privacy.clip is not None else \
                 " (UNCLIPPED: per-sample sensitivity assumed 1.0 -- " \
                 "pass --clip)"
             print(f"privacy: ({rep.adp_eps:.3f}, {rep.adp_delta:.0e})-ADP"
                   f" over K={rep.K} rounds x N_e={rep.n_epochs};"
                   f" ceiling as K*Ne->inf: eps={rep.eps_ceiling:.3f}"
                   f" at Renyi order {rep.rdp_order:.1f}{caveat}")
-        state = runtime.init_state(model, key, fcfg)
-        step = jax.jit(runtime.make_train_step(model, fcfg))
+        state = trainer.init(key)
         for i in range(args.steps):
             batch = make_batch_for(cfg, shape, jax.random.fold_in(key, i),
-                                   n_agents=args.n_agents)
+                                   n_agents=spec.n_agents)
             t0 = time.time()
-            state, metrics = step(state, batch, jax.random.fold_in(key, i))
+            state, metrics = trainer.step(state, batch,
+                                          jax.random.fold_in(key, i))
             print(f"round {i:4d} loss={float(metrics['loss']):.4f} "
                   f"part={float(metrics['participation']):.2f} "
                   f"dt={time.time() - t0:.2f}s")
-        final = runtime.consensus_model(state)
+        final = trainer.consensus(state)
     else:
         params = model.init(key)
         opt = {"sgd": sgd(args.lr), "momentum": momentum(args.lr),

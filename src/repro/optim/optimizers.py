@@ -6,7 +6,6 @@ params) -> (updates, state)``, plus ``apply_updates``.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

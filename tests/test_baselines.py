@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import baselines
-from repro.core.metrics import hitting_round
 from repro.core.problem import make_logreg_problem
 
 KEY = jax.random.PRNGKey(1)

@@ -1,6 +1,5 @@
 """Prox library: closed forms, Moreau identity, Lemma 6, nonexpansiveness."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

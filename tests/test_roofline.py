@@ -89,7 +89,6 @@ def test_trip_multiplier_exposed():
 
 
 def test_collective_pricing_all_reduce_2x():
-    from repro.launch.hlo_analysis import Costs
     text = """
 ENTRY %main (p0: f32[128]) -> f32[128] {
   %p0 = f32[128]{0} parameter(0)

@@ -1,7 +1,5 @@
 """Data pipeline, checkpointing, optimizers, sharding rules, HLO analyzer."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -159,7 +157,7 @@ def test_hlo_analyzer_scan_trip_count():
 
 def test_hlo_analyzer_collectives():
     mesh = jax.make_mesh((1,), ("d",))
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     # jax.shard_map only exists from 0.5; fall back to the experimental
     # home so the test runs on the pinned 0.4.x too
