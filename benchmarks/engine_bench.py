@@ -56,6 +56,10 @@ def run(quick=True):
         ("int8", dict(compression=CompressionSpec("int8")), 4.0),
         ("adaptive", dict(compression=CompressionSpec(
             "adaptive_topk", ratio=0.25, energy=0.9)), 4.0),
+        # heterogeneous groups: half the agents run AGD, half run one
+        # cheap GD epoch -- measures the sequential group-dispatch cost
+        ("hetero_gd_agd", dict(
+            agent_groups="1*agd,1*gd:n_epochs=1"), 1.0),
     ]
     rows = []
     ms0 = None

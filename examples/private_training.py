@@ -43,6 +43,15 @@ def main():
           f"{rep.rdp_order:.1f}; ceiling as K*Ne->inf: "
           f"{rep.eps_ceiling:.3f}")
 
+    # Prop. 4 is per-agent: with unequal local datasets the accountant
+    # returns one (eps_i, delta) row per agent and the headline eps is
+    # the max -- the small-data agents are the binding constraint
+    qs = [50] * 5 + [problem.q] * (problem.n_agents - 5)
+    rep_i = trainer.privacy_report(K, local_dataset_size=qs)
+    print(f"heterogeneous q_i: worst-agent eps = {rep_i.adp_eps:.3f} "
+          f"(q_i=50) vs {rep_i.per_agent[-1].adp_eps:.3f} "
+          f"(q_i={problem.q})")
+
     state, crit = trainer.run(jax.random.PRNGKey(0), K)
     crit = np.asarray(crit)
 

@@ -20,7 +20,8 @@ from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.checkpoint import save_checkpoint
 from repro.data.synthetic import fed_lm_batches
-from repro.fed.api import FedSpec, PrivacySpec, build_trainer
+from repro.fed.api import (FedSpec, PrivacySpec, build_trainer,
+                           parse_agent_groups)
 from repro.models.model import build_model
 
 
@@ -31,6 +32,11 @@ def main():
     ap.add_argument("--n-epochs", type=int, default=3)
     ap.add_argument("--tau", type=float, default=0.0)
     ap.add_argument("--participation", type=float, default=0.75)
+    ap.add_argument("--agent-groups", type=parse_agent_groups,
+                    default=None,
+                    help="heterogeneous agent groups, e.g. "
+                         "'2*agd,2*gd:n_epochs=1:participation=0.5' "
+                         "(sizes must sum to --n-agents)")
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--checkpoint", default=None)
@@ -51,8 +57,18 @@ def main():
     trainer = build_trainer(model, FedSpec(
         n_agents=args.n_agents, rho=1.0, gamma=0.1,
         n_epochs=args.n_epochs, participation=args.participation,
+        agent_groups=args.agent_groups,
         privacy=PrivacySpec(tau=args.tau,
                             clip=1.0 if args.tau > 0 else None)))
+    if args.tau > 0:
+        rep = trainer.privacy_report(args.rounds,
+                                     local_dataset_size=args.batch)
+        print(f"privacy: ({rep.adp_eps:.3f}, {rep.adp_delta:.0e})-ADP "
+              f"over {rep.K} rounds (ceiling {rep.eps_ceiling:.3f})")
+        if rep.per_agent:   # heterogeneous groups: per-agent table
+            for a in rep.per_agent:
+                print(f"  agent {a.agent}: N_e={a.n_epochs} "
+                      f"eps_i={a.adp_eps:.3f}")
     state = trainer.init(jax.random.PRNGKey(0))
 
     shape = InputShape("lm", args.seq_len, args.batch, "train")

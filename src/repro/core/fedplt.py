@@ -89,9 +89,20 @@ class FedPLT:
 
     ``prox_h`` overrides the coordinator regularizer resolved from
     ``config.prox_h`` (used by the front door to supply registry proxes
-    with bound kwargs, e.g. weight decay)."""
+    with bound kwargs, e.g. weight decay).
 
-    def __init__(self, problem, config: FedPLTConfig, prox_h=None):
+    ``solver_groups`` partitions the agent axis into heterogeneous
+    groups: a sequence of ``(size, SolverConfig)`` pairs (sizes summing
+    to ``n_agents``), each group running its own solver/epochs/step on
+    its contiguous slice (the paper's "agents choose their local
+    solver").  None -- or one full-size group equal to ``config.solver``
+    -- reproduces the homogeneous trajectory bit-for-bit.
+
+    ``participation`` optionally overrides ``config.participation`` with
+    a per-agent ``(N,)`` tuple of Bernoulli rates."""
+
+    def __init__(self, problem, config: FedPLTConfig, prox_h=None,
+                 solver_groups=None, participation=None):
         self.problem = problem
         self.cfg = config
         self.mu = config.mu if config.mu is not None else problem.strong_convexity()
@@ -110,10 +121,30 @@ class FedPLT:
                        else prox_lib.make_prox(config.prox_h))
         self._ecfg = engine.RoundConfig(
             n_agents=problem.n_agents, rho=config.rho,
-            participation=config.participation, damping=config.damping,
+            participation=(participation if participation is not None
+                           else config.participation),
+            damping=config.damping,
             compression=config.compression,
             compress_ratio=config.compress_ratio,
             compress_energy=config.compress_energy)
+        if solver_groups is None:
+            # the homogeneous path is the single full-size group; a
+            # [0:N] slice is a no-op, so this is bit-identical to the
+            # historical dedicated path (asserted in tests/test_api.py)
+            self._solvers = self._make_group_solver(
+                0, problem.n_agents, config.solver)
+        else:
+            sizes = [s for s, _ in solver_groups]
+            if sum(sizes) != problem.n_agents:
+                raise ValueError(
+                    f"solver_groups sizes sum to {sum(sizes)}, problem "
+                    f"has n_agents={problem.n_agents}")
+            self._solvers, start = [], 0
+            for size, scfg in solver_groups:
+                self._solvers.append(engine.SolverGroup(
+                    size, self._make_group_solver(start, size, scfg)))
+                start += size
+            self._solvers = tuple(self._solvers)
         self._round = jax.jit(self._round_impl)
 
     # ------------------------------------------------------------------
@@ -132,9 +163,10 @@ class FedPLT:
                            t=x0 if self._ecfg.compressed else None)
 
     # ------------------------------------------------------------------
-    def _fgrad(self, data, w, key):
+    def _fgrad(self, data, w, key, scfg=None):
         """Per-agent gradient oracle (full or minibatch)."""
-        if self.cfg.solver.name == "sgd" and self.cfg.batch_size is not None:
+        scfg = scfg if scfg is not None else self.cfg.solver
+        if scfg.name == "sgd" and self.cfg.batch_size is not None:
             q = data[0].shape[0]
             idx = jax.random.randint(key, (self.cfg.batch_size,), 0, q)
             return self.problem.minibatch_grad(data, w, idx)
@@ -147,26 +179,56 @@ class FedPLT:
         return (self.problem.Q, self.problem.c)
 
     # ------------------------------------------------------------------
-    def _local_solver(self, x, v, k_solve):
-        """Engine LocalSolver: per-agent ``local_train`` under vmap, with
-        (possibly per-agent, Remark 1) curvature moduli."""
-        cfg = self.cfg
-        solver_keys = jax.random.split(k_solve, self.problem.n_agents)
+    def _make_group_solver(self, start: int, size: int,
+                           scfg: SolverConfig):
+        """Engine LocalSolver for agents ``[start, start+size)`` running
+        their own ``scfg``.
 
-        def one_agent(data_i, x_i, v_i, key_i, mu_i, L_i):
-            fgrad = lambda w, k: self._fgrad(data_i, w, k)
-            return local_train(fgrad, x_i, v_i, cfg.rho, cfg.solver,
-                               key_i, mu_i, L_i)
+        Core solvers keep the historical per-agent vmap + key split over
+        ``local_train`` with (possibly per-agent, Remark 1) curvature
+        moduli -- restricted to the group's slice of the data and
+        moduli, so the single full-size group IS the homogeneous path,
+        bit for bit.  Any other name is a :mod:`repro.fed.solvers`
+        registry entry and is built through its factory on a stacked
+        gradient oracle (the same batched contract the model path uses),
+        so registered custom solvers are reachable from the dense front
+        end too."""
+        stop = start + size
+        from repro.fed import solvers as solver_registry
 
-        w = jax.vmap(one_agent)(self._agent_data(), x, v, solver_keys,
-                                self.mu_i, self.L_i)
-        return w, None
+        if scfg.name not in solver_registry.CORE_SOLVERS:
+
+            def fgrad_stacked(w_stack, key):
+                data_g = tuple(a[start:stop] for a in self._agent_data())
+                keys = jax.random.split(key, size)
+                return jax.vmap(
+                    lambda d, w, k: self._fgrad(d, w, k, scfg))(
+                        data_g, w_stack, keys)
+
+            return solver_registry.make_local_solver(
+                scfg, fgrad_stacked, self.cfg.rho, self.mu, self.L)
+
+        def solver(x_g, v_g, k_solve):
+            solver_keys = jax.random.split(k_solve, size)
+            data_g = tuple(a[start:stop] for a in self._agent_data())
+
+            def one_agent(data_i, x_i, v_i, key_i, mu_i, L_i):
+                fgrad = lambda w, k: self._fgrad(data_i, w, k, scfg)
+                return local_train(fgrad, x_i, v_i, self.cfg.rho, scfg,
+                                   key_i, mu_i, L_i)
+
+            w = jax.vmap(one_agent)(data_g, x_g, v_g, solver_keys,
+                                    self.mu_i[start:stop],
+                                    self.L_i[start:stop])
+            return w, None
+
+        return solver
 
     def _round_impl(self, state: FedPLTState) -> FedPLTState:
         compressed = self._ecfg.compressed
         t = state.t if compressed else state.z
         res = engine.round_step(self._ecfg, state.x, state.z, t,
-                                state.key, self._local_solver,
+                                state.key, self._solvers,
                                 prox_h=self.prox_h)
         return FedPLTState(x=res.x, z=res.z, y=res.y, key=res.next_key,
                            k=state.k + 1,

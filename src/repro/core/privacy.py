@@ -72,7 +72,15 @@ def calibrate_noise(target_eps: float, delta: float, sensitivity: float,
                     mu: float, q: int, gamma: float, K: int,
                     n_epochs: int, tol: float = 1e-6) -> float:
     """Smallest tau such that Fed-PLT is (target_eps, delta)-ADP
-    (bisection; eps is monotone decreasing in tau)."""
+    (bisection; eps is monotone decreasing in tau).
+
+    Raises ValueError when the target is unreachable by noise alone:
+    the Lemma-5 RDP->ADP conversion floors the ADP eps at
+    ``log(1/delta) / (lam_max - 1)`` over the searched Renyi orders, so
+    a target below that floor cannot be met no matter how large tau is
+    -- returning the bracket top silently would hand the caller a tau
+    that does NOT meet the budget it asked for.
+    """
     lo, hi = 1e-8, 1e6
     for _ in range(200):
         mid = math.sqrt(lo * hi)
@@ -84,12 +92,41 @@ def calibrate_noise(target_eps: float, delta: float, sensitivity: float,
             hi = mid
         if hi / lo < 1.0 + tol:
             break
+    achieved, _ = adp_epsilon(sensitivity, mu, hi, q, gamma, K, n_epochs,
+                              delta)
+    if not achieved <= target_eps * (1.0 + 10.0 * tol):
+        raise ValueError(
+            f"target eps={target_eps:.4g} is unreachable by noise "
+            f"calibration: best achievable eps={achieved:.4g} at "
+            f"tau={hi:.3g} (Lemma 5 floors ADP eps at "
+            f"log(1/delta)/(lambda-1) over the searched Renyi orders)")
     return hi
 
 
 @dataclasses.dataclass(frozen=True)
+class AgentPrivacy:
+    """One agent's row of the per-agent (eps_i, delta) table (Prop. 4 is
+    a per-agent bound: eps_i depends on q_i, gamma_i, and N_e,i)."""
+    agent: int
+    q: int
+    n_epochs: int
+    gamma: float
+    adp_eps: float
+    rdp_order: float
+    eps_ceiling: float
+
+
+@dataclasses.dataclass(frozen=True)
 class PrivacyReport:
-    """Summary of the privacy position of one Fed-PLT configuration."""
+    """Summary of the privacy position of one Fed-PLT configuration.
+
+    ``per_agent`` is None for a homogeneous run (every agent shares the
+    scalar fields); for heterogeneous runs it carries one
+    :class:`AgentPrivacy` row per agent and the scalar ``adp_eps`` /
+    ``eps_ceiling`` are the MAX over agents (the budget the deployment
+    as a whole must honor), with ``n_epochs`` / ``rdp_*`` taken from
+    that worst-off agent.
+    """
     tau: float
     K: int
     n_epochs: int
@@ -98,6 +135,7 @@ class PrivacyReport:
     adp_eps: float
     adp_delta: float
     eps_ceiling: float       # K*Ne -> inf limit at the same order
+    per_agent: tuple = None  # tuple[AgentPrivacy, ...] | None
 
     @staticmethod
     def build(sensitivity, mu, tau, q, gamma, K, n_epochs,
@@ -113,3 +151,30 @@ class PrivacyReport:
             eps_ceiling=rdp_to_adp(
                 rdp_epsilon_limit(lam, sensitivity, mu, tau, q), lam, delta),
         )
+
+    @staticmethod
+    def build_per_agent(sensitivities, mu, tau, qs, gammas, K,
+                        n_epochs_seq, delta=1e-5) -> "PrivacyReport":
+        """Per-agent Prop. 4 accounting: one (eps_i, delta) row per
+        agent, each with its own sensitivity / q_i / gamma_i / N_e,i and
+        its own optimized Renyi order.  The headline eps is the max over
+        agents."""
+        rows = []
+        for i, (s, q, gamma, ne) in enumerate(
+                zip(sensitivities, qs, gammas, n_epochs_seq)):
+            eps, lam = adp_epsilon(s, mu, tau, q, gamma, K, ne, delta)
+            rows.append(AgentPrivacy(
+                agent=i, q=q, n_epochs=ne, gamma=gamma, adp_eps=eps,
+                rdp_order=lam,
+                eps_ceiling=rdp_to_adp(
+                    rdp_epsilon_limit(lam, s, mu, tau, q), lam, delta)))
+        worst = max(rows, key=lambda r: r.adp_eps)
+        return PrivacyReport(
+            tau=tau, K=K, n_epochs=worst.n_epochs,
+            rdp_eps=rdp_epsilon(worst.rdp_order,
+                                sensitivities[worst.agent], mu, tau,
+                                worst.q, worst.gamma, K, worst.n_epochs),
+            rdp_order=worst.rdp_order,
+            adp_eps=worst.adp_eps, adp_delta=delta,
+            eps_ceiling=max(r.eps_ceiling for r in rows),
+            per_agent=tuple(rows))

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Sequence, Union
 
 import jax
 
@@ -42,8 +42,23 @@ from repro.core import prox as prox_lib
 from repro.core.solvers import SolverConfig
 from repro.fed import engine
 from repro.fed.compress import available_compressors, get_compressor
+from repro.fed.solvers import get_solver
 
-_KNOWN_SOLVERS = ("gd", "agd", "sgd", "noisy_gd")
+
+def _upgrade_solver(name: str, tau: float) -> str:
+    """tau > 0 turns the gd-type solvers into DP noisy GD.
+
+    Any other solver -- agd, or a custom registry entry -- is REJECTED
+    under tau > 0: the Prop. 4 accountant certifies noisy local GD
+    specifically, and a solver that injects no noise must never receive
+    an (eps, delta) certificate just because tau was set."""
+    if tau > 0.0:
+        if name in ("gd", "sgd"):
+            return "noisy_gd"
+        if name != "noisy_gd":
+            raise ValueError("DP noise (tau > 0) requires a gd-type "
+                             f"solver, not {name!r}")
+    return name
 
 
 def _cli(flag=None, help="", arg_type=None, choices=None, default=None,
@@ -93,6 +108,65 @@ class CompressionSpec:
         help="adaptive_topk per-agent energy target"))
 
 
+@dataclasses.dataclass(frozen=True)
+class AgentGroupSpec:
+    """One contiguous group of agents with its own local-training recipe.
+
+    ``None`` fields inherit the top-level :class:`FedSpec` value, so a
+    group only states what makes it *different*.  Groups partition the
+    agent axis in order: the first group owns agents ``[0, size)``, the
+    next ``[size, size + size')``, and so on; the engine runs each
+    group's registered solver on its slice and re-stitches the stacked
+    pytree (:func:`repro.fed.engine.run_solvers`).
+    """
+
+    size: int
+    solver: Optional[str] = None         # repro.fed.solvers registry name
+    n_epochs: Optional[int] = None       # N_e of this group
+    gamma: Optional[float] = None        # local step size of this group
+    participation: Optional[float] = None  # Bernoulli p of this group
+
+
+def parse_agent_groups(text: str) -> tuple[AgentGroupSpec, ...]:
+    """Parse the CLI grammar for ``--agent-groups``.
+
+    Comma-separated groups, each ``SIZE[*SOLVER][:key=value]...`` with
+    keys ``n_epochs`` / ``gamma`` / ``participation``; omitted pieces
+    inherit the top-level spec.  Examples::
+
+        2*gd,2*agd
+        3*gd:participation=0.5,1*agd:n_epochs=1:gamma=0.02
+    """
+    groups = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            raise ValueError(f"empty agent group in {text!r}")
+        head, *opts = part.split(":")
+        if "*" in head:
+            size_s, solver = head.split("*", 1)
+            solver = solver.strip() or None
+        else:
+            size_s, solver = head, None
+        try:
+            size = int(size_s)
+        except ValueError:
+            raise ValueError(
+                f"agent group {part!r} must start with an integer size "
+                f"(grammar: SIZE[*SOLVER][:key=value]...)") from None
+        kw = {}
+        for opt in opts:
+            k, sep, val = opt.partition("=")
+            k = k.strip()
+            if not sep or k not in ("n_epochs", "gamma", "participation"):
+                raise ValueError(
+                    f"unknown agent-group option {opt!r} in {part!r} "
+                    f"(known: n_epochs=, gamma=, participation=)")
+            kw[k] = int(val) if k == "n_epochs" else float(val)
+        groups.append(AgentGroupSpec(size=size, solver=solver, **kw))
+    return tuple(groups)
+
+
 # ---------------------------------------------------------------------------
 # The spec
 # ---------------------------------------------------------------------------
@@ -115,8 +189,10 @@ class FedSpec:
     solver: str = dataclasses.field(default="gd", metadata=_cli(
         choices=["gd", "agd", "sgd"],
         help="local solver (tau > 0 upgrades gd-type to noisy_gd)"))
+    # NOTE: the generated CLI default must equal the field default (one
+    # FedSpec() regardless of the front end) -- asserted in tests.
     n_epochs: int = dataclasses.field(default=5, metadata=_cli(
-        default=3, help="local epochs N_e per round"))
+        help="local epochs N_e per round"))
     gamma: Optional[float] = dataclasses.field(default=None, metadata=_cli(
         arg_type=float, default=0.05,
         help="local step size (None: optimal 2/(L_d + mu_d) from moduli; "
@@ -129,6 +205,17 @@ class FedSpec:
         default=None, metadata=_cli(expose=False))  # dense sgd minibatch
     uncoordinated: bool = dataclasses.field(
         default=False, metadata=_cli(expose=False))  # Remark 1 (dense)
+    # -- heterogeneous agent groups -------------------------------------
+    # None = every agent runs the top-level solver/n_epochs/gamma/
+    # participation (the historical homogeneous path, bit-identical).
+    # A tuple of AgentGroupSpec partitions the agent axis into groups,
+    # each with its own registered solver and knobs.
+    agent_groups: Optional[tuple[AgentGroupSpec, ...]] = dataclasses.field(
+        default=None, metadata=_cli(
+            arg_type=parse_agent_groups,
+            help="heterogeneous agent groups, e.g. "
+                 "'2*gd,2*agd:n_epochs=1:gamma=0.02' (sizes must sum to "
+                 "n-agents; omitted knobs inherit the top-level spec)"))
     # -- coordinator regularizer h --------------------------------------
     prox_h: str = dataclasses.field(default="zero",
                                     metadata=_cli(expose=False))
@@ -143,23 +230,63 @@ class FedSpec:
         flag="--use-pallas-update",
         help="fused fedplt_update kernel for the local step"))
 
+    def __post_init__(self):
+        groups = self.agent_groups
+        if groups is not None:
+            if isinstance(groups, str):
+                groups = parse_agent_groups(groups)
+            object.__setattr__(self, "agent_groups", tuple(groups))
+
     # ------------------------------------------------------------------
     # Resolution
     # ------------------------------------------------------------------
     def solver_name(self) -> str:
         """tau > 0 turns the gd-type solvers into DP noisy GD."""
-        if self.privacy.tau > 0.0:
-            if self.solver == "agd":
-                raise ValueError("DP noise (tau > 0) requires a gd-type "
-                                 "solver, not 'agd'")
-            if self.solver in ("gd", "sgd"):
-                return "noisy_gd"
-        return self.solver
+        return _upgrade_solver(self.solver, self.privacy.tau)
 
     def solver_config(self) -> SolverConfig:
         return SolverConfig(name=self.solver_name(),
                             n_epochs=self.n_epochs, step_size=self.gamma,
                             tau=self.privacy.tau, clip=self.privacy.clip)
+
+    def resolved_groups(self) -> Optional[tuple[AgentGroupSpec, ...]]:
+        """``agent_groups`` with every None field filled from the
+        top-level spec (None when the spec is homogeneous)."""
+        if self.agent_groups is None:
+            return None
+        return tuple(AgentGroupSpec(
+            size=g.size,
+            solver=g.solver if g.solver is not None else self.solver,
+            n_epochs=(g.n_epochs if g.n_epochs is not None
+                      else self.n_epochs),
+            gamma=g.gamma if g.gamma is not None else self.gamma,
+            participation=(g.participation if g.participation is not None
+                           else self.participation))
+            for g in self.agent_groups)
+
+    def group_solver_configs(self) -> Optional[tuple[SolverConfig, ...]]:
+        """Per-group :class:`SolverConfig` (tau>0 upgrades gd-type
+        groups to noisy GD, exactly like the homogeneous path)."""
+        groups = self.resolved_groups()
+        if groups is None:
+            return None
+        return tuple(SolverConfig(
+            name=_upgrade_solver(g.solver, self.privacy.tau),
+            n_epochs=g.n_epochs, step_size=g.gamma,
+            tau=self.privacy.tau, clip=self.privacy.clip)
+            for g in groups)
+
+    def participation_schedule(self) -> Union[float, tuple[float, ...]]:
+        """Engine participation: the scalar p, or the per-agent (N,)
+        tuple expanded from the groups when any group deviates."""
+        groups = self.resolved_groups()
+        if groups is None or all(
+                g.participation == self.participation for g in groups):
+            return self.participation
+        out: list[float] = []
+        for g in groups:
+            out.extend([float(g.participation)] * g.size)
+        return tuple(out)
 
     def round_config(self) -> engine.RoundConfig:
         if self.n_agents is None:
@@ -168,13 +295,15 @@ class FedSpec:
                              "explicitly at model scale)")
         return engine.RoundConfig(
             n_agents=self.n_agents, rho=self.rho,
-            participation=self.participation, damping=self.damping,
+            participation=self.participation_schedule(),
+            damping=self.damping,
             compression=self.compression.name,
             compress_ratio=self.compression.ratio,
             compress_energy=self.compression.energy)
 
-    def moduli(self) -> tuple[float, Optional[float]]:
-        """(mu, L) of the local f_i for momentum resolution.  Explicit
+    def moduli_for(self, gamma: Optional[float]) \
+            -> tuple[float, Optional[float]]:
+        """(mu, L) of the local f_i given a group's step size.  Explicit
         values win; with ``gamma`` set (model scale) an unknown L is
         derived as 1/gamma - 1/rho so that agd's 1/L_d step equals
         gamma; with neither (dense path) L stays None and the problem's
@@ -182,9 +311,14 @@ class FedSpec:
         mu = self.mu if self.mu is not None else 0.0
         if self.L is not None:
             return mu, self.L
-        if self.gamma is None:
+        if gamma is None:
             return mu, None
-        return mu, 1.0 / self.gamma - 1.0 / self.rho
+        return mu, 1.0 / gamma - 1.0 / self.rho
+
+    def moduli(self) -> tuple[float, Optional[float]]:
+        """(mu, L) of the local f_i for momentum resolution (top-level
+        gamma; see :meth:`moduli_for`)."""
+        return self.moduli_for(self.gamma)
 
     def resolve_prox_h(self) -> engine.ProxH:
         """Engine ProxH of the coordinator regularizer h; None when h = 0.
@@ -224,9 +358,7 @@ class FedSpec:
         if not 0.0 < p.delta < 1.0:
             raise ValueError("delta must be in (0, 1)")
         name = self.solver_name()   # raises for agd + tau > 0
-        if name not in _KNOWN_SOLVERS:
-            raise ValueError(f"unknown solver {name!r}; known: "
-                             f"{', '.join(_KNOWN_SOLVERS)}")
+        get_solver(name)            # unknown-solver registry error
         get_compressor(self.compression.name)  # unknown-compressor error
         if not 0.0 < self.compression.ratio <= 1.0:
             raise ValueError("compress ratio must be in (0, 1]")
@@ -240,17 +372,52 @@ class FedSpec:
                              "mutually exclusive (one coordinator h)")
         self.resolve_prox_h()       # unknown prox name -> KeyError
         if name == "agd":
-            mu, L = self.moduli()
-            if L is not None and L <= mu:
-                if self.L is not None:
-                    raise ValueError(f"agd momentum needs L > mu (got "
-                                     f"L={L:.4g}, mu={mu:.4g})")
-                raise ValueError(
-                    f"agd momentum needs L > mu; derived L={L:.4g} from "
-                    f"gamma={self.gamma} (needs gamma < rho/(1 + mu*rho) "
-                    f"= {self.rho / (1.0 + mu * self.rho):.4g}) -- pass "
-                    f"an explicit L in the spec")
+            self._check_agd_moduli(self.gamma)
+        self._validate_groups()
         return self
+
+    def _check_agd_moduli(self, gamma: Optional[float],
+                          where: str = "") -> None:
+        mu, L = self.moduli_for(gamma)
+        if L is not None and L <= mu:
+            if self.L is not None:
+                raise ValueError(f"agd momentum needs L > mu (got "
+                                 f"L={L:.4g}, mu={mu:.4g}){where}")
+            raise ValueError(
+                f"agd momentum needs L > mu; derived L={L:.4g} from "
+                f"gamma={gamma} (needs gamma < rho/(1 + mu*rho) "
+                f"= {self.rho / (1.0 + mu * self.rho):.4g}) -- pass "
+                f"an explicit L in the spec{where}")
+
+    def _validate_groups(self) -> None:
+        groups = self.resolved_groups()
+        if groups is None:
+            return
+        if not groups:
+            raise ValueError("agent_groups must have at least one group "
+                             "(use None for the homogeneous path)")
+        for i, g in enumerate(groups):
+            where = f" (agent group {i})"
+            if g.size < 1:
+                raise ValueError(f"agent group sizes must be >= 1, got "
+                                 f"{g.size}{where}")
+            gname = _upgrade_solver(g.solver, self.privacy.tau)
+            get_solver(gname)   # unknown-solver registry error
+            if g.n_epochs < 1:
+                raise ValueError(f"n_epochs must be >= 1{where}")
+            if g.gamma is not None and g.gamma <= 0.0:
+                raise ValueError(f"gamma must be positive{where}")
+            if not 0.0 < g.participation <= 1.0:
+                raise ValueError(
+                    f"participation must be in (0, 1]{where}")
+            if gname == "agd":
+                self._check_agd_moduli(g.gamma, where)
+        total = sum(g.size for g in groups)
+        if self.n_agents is not None and total != self.n_agents:
+            raise ValueError(
+                f"agent_groups sizes sum to {total}, but "
+                f"n_agents={self.n_agents} -- groups must partition the "
+                f"agent axis")
 
     # ------------------------------------------------------------------
     # Legacy-config bridge (kept bit-compatible)
@@ -291,11 +458,35 @@ def as_spec(cfg: Any) -> FedSpec:
 # Privacy accounting from the spec
 # ---------------------------------------------------------------------------
 
-def privacy_report(spec: Any, n_rounds: int, local_dataset_size: int,
+def _resolve_gamma(spec: "FedSpec", gamma: Optional[float]) -> float:
+    """A concrete step size for the accountant: the configured gamma, or
+    the optimal 2/(L_d + mu_d) derived from explicit moduli."""
+    if gamma is not None:
+        return gamma
+    m, L = spec.moduli()
+    if L is None:
+        raise ValueError("privacy_report needs gamma (or explicit "
+                         "moduli to derive it)")
+    return spec.solver_config().resolve_step_size(
+        m + 1.0 / spec.rho, L + 1.0 / spec.rho)
+
+
+def privacy_report(spec: Any, n_rounds: int,
+                   local_dataset_size: Union[int, Sequence[int]],
                    delta: Optional[float] = None, *,
                    mu: Optional[float] = None):
     """Position a DP run on the paper's (eps, delta) map (Prop. 4 +
     Lemma 5 via :mod:`repro.core.privacy`).
+
+    Proposition 4 is a PER-AGENT statement: eps_i depends on agent i's
+    dataset size q_i and local epoch count.  ``local_dataset_size`` may
+    therefore be one int (every agent) or a per-agent sequence; with
+    per-agent sizes or a heterogeneous ``spec.agent_groups`` the report
+    carries the full per-agent (eps_i, delta) table
+    (``report.per_agent``) and its headline ``adp_eps`` is the max over
+    agents -- the budget the deployment as a whole must honor.  A
+    homogeneous spec with one scalar q returns the historical scalar
+    report unchanged.
 
     ``mu`` is the strong-convexity modulus the accountant charges
     against: the caller's problem modulus on the dense path, and by
@@ -307,7 +498,7 @@ def privacy_report(spec: Any, n_rounds: int, local_dataset_size: int,
     Assumption-3 L (a PER-SAMPLE gradient bound; the bound divides by
     q^2).  The runtime clips the per-agent MEAN gradient at C, so
     swapping one of q samples can move the clipped gradient by up to 2C
-    -- the per-sample-equivalent bound is L = C * q.  An unclipped run
+    -- the per-sample-equivalent bound is L = C * q_i.  An unclipped run
     assumes per-sample bound L = 1.0 and a loud caveat is on the caller.
     """
     from repro.core.privacy import PrivacyReport
@@ -320,21 +511,50 @@ def privacy_report(spec: Any, n_rounds: int, local_dataset_size: int,
     if mu_eff <= 0.0:
         raise ValueError("privacy accounting requires a strongly convex "
                          "local objective (mu > 0)")
-    gamma = spec.gamma
-    if gamma is None:
-        m, L = spec.moduli()
-        if L is None:
-            raise ValueError("privacy_report needs gamma (or explicit "
-                             "moduli to derive it)")
-        gamma = spec.solver_config().resolve_step_size(
-            m + 1.0 / spec.rho, L + 1.0 / spec.rho)
-    sensitivity = (p.clip * local_dataset_size
-                   if p.clip is not None else 1.0)
-    return PrivacyReport.build(
-        sensitivity=sensitivity, mu=mu_eff, tau=p.tau,
-        q=local_dataset_size, gamma=gamma, K=n_rounds,
-        n_epochs=spec.n_epochs, delta=delta if delta is not None
-        else p.delta)
+    delta_eff = delta if delta is not None else p.delta
+    groups = spec.resolved_groups()
+
+    if isinstance(local_dataset_size, (str, bytes)):
+        raise TypeError("local_dataset_size must be an int or a "
+                        "sequence of per-agent ints, not a string")
+    try:                     # a per-agent sequence of q_i?
+        qs = [int(q) for q in local_dataset_size]
+    except TypeError:        # scalar (python or numpy int): every agent
+        qs = None
+
+    if groups is None and qs is None:
+        # homogeneous spec, one q: the historical scalar report
+        gamma = _resolve_gamma(spec, spec.gamma)
+        sensitivity = (p.clip * local_dataset_size
+                       if p.clip is not None else 1.0)
+        return PrivacyReport.build(
+            sensitivity=sensitivity, mu=mu_eff, tau=p.tau,
+            q=local_dataset_size, gamma=gamma, K=n_rounds,
+            n_epochs=spec.n_epochs, delta=delta_eff)
+
+    # per-agent accounting: expand groups / q_i to one row per agent
+    if spec.n_agents is None:
+        raise ValueError("per-agent privacy_report needs a resolved "
+                         "n_agents")
+    N = spec.n_agents
+    if qs is None:
+        qs = [local_dataset_size] * N
+    if len(qs) != N:
+        raise ValueError(f"local_dataset_size has {len(qs)} entries for "
+                         f"n_agents={N}")
+    if groups is None:
+        gammas = [_resolve_gamma(spec, spec.gamma)] * N
+        epochs = [spec.n_epochs] * N
+    else:
+        gammas, epochs = [], []
+        for g in groups:
+            gammas.extend([_resolve_gamma(spec, g.gamma)] * g.size)
+            epochs.extend([g.n_epochs] * g.size)
+    sensitivities = [p.clip * q if p.clip is not None else 1.0
+                     for q in qs]
+    return PrivacyReport.build_per_agent(
+        sensitivities=sensitivities, mu=mu_eff, tau=p.tau, qs=qs,
+        gammas=gammas, K=n_rounds, n_epochs_seq=epochs, delta=delta_eff)
 
 
 # ---------------------------------------------------------------------------
@@ -364,7 +584,7 @@ class FedTrainer:
         raise NotImplementedError
 
     def privacy_report(self, n_rounds: int,
-                       local_dataset_size: Optional[int] = None,
+                       local_dataset_size=None,
                        delta: Optional[float] = None):
         raise NotImplementedError
 
@@ -390,9 +610,19 @@ class DenseTrainer(FedTrainer):
 
         prox_override = (self.spec.resolve_prox_h()
                          if self.spec.weight_decay != 0.0 else None)
+        groups = self._resolved.resolved_groups()
+        solver_groups = None
+        if groups is not None:
+            solver_groups = tuple(
+                (g.size, scfg) for g, scfg in zip(
+                    groups, self._resolved.group_solver_configs()))
+        part = self._resolved.participation_schedule()
         self.problem = problem
         self.algo = FedPLT(problem, self.spec.to_dense_config(),
-                           prox_h=prox_override)
+                           prox_h=prox_override,
+                           solver_groups=solver_groups,
+                           participation=part if isinstance(part, tuple)
+                           else None)
 
     def init(self, key: jax.Array):
         return self.algo.init(key)
@@ -409,8 +639,10 @@ class DenseTrainer(FedTrainer):
         return self.algo.x_bar(state)
 
     def privacy_report(self, n_rounds: int,
-                       local_dataset_size: Optional[int] = None,
+                       local_dataset_size=None,
                        delta: Optional[float] = None):
+        """``local_dataset_size`` may be one int or a per-agent sequence
+        of q_i (defaults to the problem's uniform q)."""
         q = (local_dataset_size if local_dataset_size is not None
              else self.problem.q)
         return privacy_report(self._resolved, n_rounds, q, delta,
@@ -462,8 +694,10 @@ class ModelTrainer(FedTrainer):
         return self._runtime.consensus_model(state)
 
     def privacy_report(self, n_rounds: int,
-                       local_dataset_size: Optional[int] = None,
+                       local_dataset_size=None,
                        delta: Optional[float] = None):
+        """``local_dataset_size`` may be one int or a per-agent sequence
+        of q_i."""
         if local_dataset_size is None:
             raise ValueError("model-scale privacy_report needs the local "
                              "dataset size q_i")

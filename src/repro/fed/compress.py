@@ -90,12 +90,18 @@ def compress_none(dz: jnp.ndarray, cfg) -> jnp.ndarray:
 @register_compressor("topk")
 def compress_topk(dz: jnp.ndarray, cfg) -> jnp.ndarray:
     """Keep the ``compress_ratio`` fraction of largest-magnitude entries
-    per agent (same k for every agent)."""
+    per agent (same k for every agent).
+
+    Exactly k entries survive: selection is by top-k *index* (ties
+    broken by position), not by thresholding ``|row| >= |row|_(k)`` --
+    a threshold transmits every tied coordinate (an all-constant row
+    would transmit ALL of them), silently blowing the bandwidth budget
+    the ratio promises."""
     k = max(1, int(cfg.compress_ratio * dz.shape[-1]))
 
     def topk_row(row):
-        thresh = jnp.sort(jnp.abs(row))[-k]
-        return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
+        _, idx = jax.lax.top_k(jnp.abs(row), k)
+        return jnp.zeros_like(row).at[idx].set(row[idx])
 
     return jax.vmap(topk_row)(dz)
 
@@ -130,7 +136,13 @@ def compress_adaptive_topk(dz: jnp.ndarray, cfg) -> jnp.ndarray:
         # smallest prefix capturing the energy target, never below the floor
         k = jnp.sum(cum < cfg.compress_energy * total) + 1
         k = jnp.clip(k, k_floor, m)
-        thresh = jnp.take(jnp.sort(jnp.abs(row)), m - k)
-        return jnp.where(jnp.abs(row) >= thresh, row, 0.0)
+        # exactly-k selection by magnitude *rank* (stable argsort breaks
+        # ties by position); k is traced here, so jax.lax.top_k (static
+        # k only) is not an option and thresholding would transmit every
+        # tied coordinate
+        order = jnp.argsort(-jnp.abs(row))
+        rank = jnp.zeros(m, jnp.int32).at[order].set(
+            jnp.arange(m, dtype=jnp.int32))
+        return jnp.where(rank < k, row, 0.0)
 
     return jax.vmap(row_fn)(dz)

@@ -13,11 +13,17 @@ just the single-leaf case, a stacked model parameter pytree
       z_i   <- z_i + 2 * damping * (x_i - y)
   agents inactive: state unchanged.
 
-The local solver is pluggable (:data:`LocalSolver`): adapters supply the
-gradient oracle / per-agent vmap; the *round topology* -- coordinator
-prox, reflection, participation masking, and the compressed z-exchange --
+The local solver is pluggable (:data:`LocalSolver`, built by name from
+the :mod:`repro.fed.solvers` registry): adapters supply the gradient
+oracle / per-agent vmap; the *round topology* -- coordinator prox,
+reflection, participation masking, and the compressed z-exchange --
 lives only here, so ``core/fedplt.py`` and ``fed/runtime.py`` cannot
-diverge again.
+diverge again.  Agents need not be uniform: ``round_step`` accepts a
+partition of the agent axis into :class:`SolverGroup` slices (each with
+its own solver/epochs/step size, see :func:`run_solvers`) and
+``participation`` may be a per-agent vector -- the paper's "agents
+choose their local training solver" and per-agent Prop. 4 accounting,
+at engine level.
 
 Compressed uplink (beyond-paper): agents transmit the compressed
 increment ``C(z_new - t)`` and the coordinator's copy ``t`` advances by
@@ -29,7 +35,7 @@ memory would double-count the residual and diverge).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +49,28 @@ tree_map = jax.tree_util.tree_map
 # previous local states as the first argument.
 LocalSolver = Callable[[Any, Any, jax.Array], Tuple[Any, Any]]
 
+
+class SolverGroup(NamedTuple):
+    """A contiguous slice of the agent axis running its own local solver.
+
+    ``round_step`` accepts a sequence of groups instead of one
+    :data:`LocalSolver`: the stacked pytrees are partitioned along the
+    agent axis (group g owns agents ``[sum(sizes[:g]), sum(sizes[:g+1]))``),
+    each group's solver runs on its slice (vmapped within the group by
+    whoever built it), and the results are re-stitched by concatenation.
+    A single group is dispatched exactly like a bare solver (same key,
+    no slicing), so a homogeneous "grouped" round is bit-identical to
+    the historical path.
+    """
+
+    size: int
+    solver: LocalSolver
+
+
+# A round's solver assignment: one solver for every agent, or a
+# partition of the agent axis into heterogeneous groups.
+SolverAssignment = Union[LocalSolver, Sequence[SolverGroup]]
+
 # Leaf-wise proximal operator of the coordinator regularizer h:
 # (zbar, rho_eff) -> y, applied to the agent-mean tree with
 # rho_eff = rho / N (Lemma 6).  None means h = 0 (identity).
@@ -55,7 +83,9 @@ class RoundConfig:
 
     n_agents: int
     rho: float = 1.0
-    participation: float = 1.0        # p (uniform across agents)
+    # p: one scalar shared by every agent, or an (n_agents,)-tuple of
+    # per-agent probabilities (Prop. 4 / heterogeneous deployments)
+    participation: Union[float, Tuple[float, ...]] = 1.0
     # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges.
@@ -68,6 +98,14 @@ class RoundConfig:
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
+        p = self.participation
+        if isinstance(p, (list, tuple)) or hasattr(p, "__len__"):
+            p = tuple(float(x) for x in p)
+            object.__setattr__(self, "participation", p)
+            if len(p) != self.n_agents:
+                raise ValueError(
+                    f"per-agent participation has {len(p)} entries for "
+                    f"n_agents={self.n_agents}")
 
     @property
     def compressed(self) -> bool:
@@ -108,9 +146,16 @@ def reflect(y: Any, z: Any) -> Any:
 
 
 def participation_mask(key: jax.Array, cfg: RoundConfig) -> jnp.ndarray:
-    """One Bernoulli(p) draw per agent, as a float (N,) vector."""
+    """One Bernoulli(p_i) draw per agent, as a float (N,) vector.
+
+    Scalar ``cfg.participation`` reproduces the historical uniform draw
+    bit-for-bit; an ``(N,)`` tuple draws each agent at its own rate from
+    the same key (one uniform per agent either way)."""
+    p = cfg.participation
+    if isinstance(p, tuple):
+        p = jnp.asarray(p, jnp.float32)
     return jax.random.bernoulli(
-        key, cfg.participation, (cfg.n_agents,)).astype(jnp.float32)
+        key, p, (cfg.n_agents,)).astype(jnp.float32)
 
 
 def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
@@ -128,6 +173,54 @@ def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Heterogeneous agent groups
+# ---------------------------------------------------------------------------
+
+def _slice_agents(tree: Any, start: int, stop: int) -> Any:
+    return tree_map(lambda l: l[start:stop], tree)
+
+
+def run_solvers(local_solver: SolverAssignment, x: Any, v: Any,
+                key: jax.Array, n_agents: int) -> Tuple[Any, Any]:
+    """Dispatch the round's solver assignment on the reflected states.
+
+    A bare :data:`LocalSolver` (or a single :class:`SolverGroup`) is
+    called on the full stack with ``key`` unchanged -- bit-identical to
+    the historical homogeneous path.  Multiple groups partition the
+    agent axis contiguously: group ``g`` solves its slice under
+    ``fold_in(key, g)`` and the per-group results are re-stitched by
+    concatenation.  ``aux`` is the solver's aux unchanged when
+    homogeneous, else the tuple of per-group auxes (None when every
+    group returned None) -- per-group epoch counts may differ, so the
+    engine cannot stack them.
+    """
+    if isinstance(local_solver, SolverGroup):   # bare group, not a seq
+        local_solver = (local_solver,)
+    if callable(local_solver):
+        return local_solver(x, v, key)
+    groups = tuple(local_solver)
+    sizes = [g.size for g in groups]
+    if sum(sizes) != n_agents:
+        raise ValueError(f"solver groups cover {sum(sizes)} agents, "
+                         f"round has n_agents={n_agents}")
+    if len(groups) == 1:
+        return groups[0].solver(x, v, key)
+    ws, auxs = [], []
+    start = 0
+    for g_idx, grp in enumerate(groups):
+        stop = start + grp.size
+        w_g, aux_g = grp.solver(_slice_agents(x, start, stop),
+                                _slice_agents(v, start, stop),
+                                jax.random.fold_in(key, g_idx))
+        ws.append(w_g)
+        auxs.append(aux_g)
+        start = stop
+    w = tree_map(lambda *ls: jnp.concatenate(ls, axis=0), *ws)
+    aux = None if all(a is None for a in auxs) else tuple(auxs)
+    return w, aux
+
+
+# ---------------------------------------------------------------------------
 # Compressed z-exchange: the compressor itself lives in the
 # repro.fed.compress registry; `compress_increment` is re-exported above
 # so front ends keep one import site.
@@ -136,13 +229,16 @@ def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
 # ---------------------------------------------------------------------------
 
 def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
-               local_solver: LocalSolver, prox_h: ProxH = None) -> RoundResult:
+               local_solver: SolverAssignment,
+               prox_h: ProxH = None) -> RoundResult:
     """One Fed-PLT round on agent-stacked pytrees.
 
     ``t`` is the coordinator's copy of ``z`` (pass ``z`` itself when the
     exchange is uncompressed).  Consumes ``key`` exactly like the
     historical implementations: split 3 ways (carry, participation,
-    solver).
+    solver).  ``local_solver`` is one solver for every agent or a
+    sequence of :class:`SolverGroup` partitioning the agent axis (see
+    :func:`run_solvers`).
     """
     key, k_part, k_solve = jax.random.split(key, 3)
 
@@ -153,7 +249,7 @@ def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
 
     # -- agents: reflection + warm-started local training ----------------
     v = reflect(y, z)
-    w, aux = local_solver(x, v, k_solve)
+    w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
 
     # -- partial participation ------------------------------------------
     u = participation_mask(k_part, cfg)
@@ -194,18 +290,13 @@ def make_local_solver(solver_cfg, fgrad, rho: float, mu: float = 0.0,
     ``fgrad(w_stack, key)`` returns the per-agent gradient pytree (leaves
     (N, ...)); with ``has_aux`` it returns ``(grads, aux)``.  Solver
     choice, step size, DP noise, and per-agent clipping all come from
-    ``solver_cfg`` (a :class:`repro.core.solvers.SolverConfig`); the
-    fused ``fedplt_update`` Pallas kernel is used for the inner step when
-    ``use_pallas`` and the step size is static.
+    ``solver_cfg`` (a :class:`repro.core.solvers.SolverConfig`);
+    dispatch goes through the :mod:`repro.fed.solvers` registry, so a
+    solver registered there is reachable by name from every front end.
+    The fused ``fedplt_update`` Pallas kernel is used for the inner step
+    when ``use_pallas`` and the step size is static.
     """
-    from repro.core.solvers import local_train
+    from repro.fed.solvers import make_local_solver as _make
 
-    def solver(x, v, key):
-        out = local_train(fgrad, x, v, rho, solver_cfg, key, mu, L,
-                          batched=True, has_aux=has_aux,
-                          use_pallas=use_pallas)
-        if has_aux:
-            return out
-        return out, None
-
-    return solver
+    return _make(solver_cfg, fgrad, rho, mu, L, use_pallas=use_pallas,
+                 has_aux=has_aux)

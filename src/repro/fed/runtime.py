@@ -123,6 +123,8 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
     ecfg = spec.round_config()
     prox_h = spec.resolve_prox_h()
     mu, L = spec.moduli()
+    groups = spec.resolved_groups()
+    group_cfgs = spec.group_solver_configs()
 
     def per_agent_loss(params_i, batch_i):
         return model.loss_fn(params_i, batch=batch_i, remat=use_remat)
@@ -132,21 +134,51 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
     def train_step(state: FedState, batch, key: jax.Array):
         rkey = jax.random.fold_in(key, state.step)
 
-        def fgrad(w, k):
-            del k  # the local batch is fixed within a round
-            losses, g = jax.vmap(grad_fn)(w, batch)
-            return g, losses
+        def fgrad_for(batch_slice):
+            def fgrad(w, k):
+                del k  # the local batch is fixed within a round
+                losses, g = jax.vmap(grad_fn)(w, batch_slice)
+                return g, losses
+            return fgrad
 
-        local_solver = engine.make_local_solver(
-            scfg, fgrad, spec.rho, mu, L,
-            use_pallas=spec.use_pallas, has_aux=True)
+        if groups is None:
+            local_solver = engine.make_local_solver(
+                scfg, fgrad_for(batch), spec.rho, mu, L,
+                use_pallas=spec.use_pallas, has_aux=True)
+        else:
+            # heterogeneous groups: each contiguous agent slice gets its
+            # own registered solver over its slice of the batch, with
+            # moduli derived from the group's own step size
+            local_solver, start = [], 0
+            for g, gscfg in zip(groups, group_cfgs):
+                stop = start + g.size
+                batch_g = jax.tree_util.tree_map(
+                    lambda b, lo=start, hi=stop: b[lo:hi], batch)
+                mu_g, L_g = spec.moduli_for(gscfg.step_size)
+                local_solver.append(engine.SolverGroup(
+                    g.size, engine.make_local_solver(
+                        gscfg, fgrad_for(batch_g), spec.rho, mu_g, L_g,
+                        use_pallas=spec.use_pallas, has_aux=True)))
+                start = stop
+            local_solver = tuple(local_solver)
 
         t = state.t if ecfg.compressed else state.z
         res = engine.round_step(ecfg, state.x, state.z, t, rkey,
                                 local_solver, prox_h=prox_h)
 
+        # aux is the (N_e, A) per-epoch loss stack when homogeneous, a
+        # tuple of per-group (N_e_g, size_g) stacks when grouped (epoch
+        # counts may differ per group).  A custom registry solver may
+        # return aux=None -- its agents drop out of the metric (NaN when
+        # nobody reports) rather than crashing the round.
+        if groups is None or len(local_solver) == 1:
+            lasts = [] if res.aux is None else [res.aux[-1]]
+        else:
+            lasts = [a[-1] for a in (res.aux or ()) if a is not None]
+        loss = (jnp.mean(jnp.concatenate(lasts)) if lasts
+                else jnp.asarray(jnp.nan, jnp.float32))
         metrics = {
-            "loss": jnp.mean(res.aux[-1]),   # (N_e, A) per-epoch losses
+            "loss": loss,
             "participation": jnp.mean(res.u.astype(jnp.float32)),
         }
         new_state = FedState(x=res.x, z=res.z, step=state.step + 1,

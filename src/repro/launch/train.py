@@ -74,6 +74,14 @@ def main():
                   f" over K={rep.K} rounds x N_e={rep.n_epochs};"
                   f" ceiling as K*Ne->inf: eps={rep.eps_ceiling:.3f}"
                   f" at Renyi order {rep.rdp_order:.1f}{caveat}")
+            if rep.per_agent:
+                # heterogeneous run: the headline eps above is the max
+                # over this per-agent (eps_i, delta) table (Prop. 4)
+                for a in rep.per_agent:
+                    print(f"  agent {a.agent:3d}: q_i={a.q} "
+                          f"N_e={a.n_epochs} gamma={a.gamma:.4g} "
+                          f"eps_i={a.adp_eps:.3f} "
+                          f"(ceiling {a.eps_ceiling:.3f})")
         state = trainer.init(key)
         for i in range(args.steps):
             batch = make_batch_for(cfg, shape, jax.random.fold_in(key, i),

@@ -227,6 +227,29 @@ def test_spec_from_args_roundtrip(quad):
     assert state.t is not None   # compressed exchange materializes t
 
 
+def test_cli_defaults_match_spec_field_defaults():
+    """A no-flag CLI run and FedSpec() must denote the SAME training
+    trajectory: every exposed field whose dataclass default is concrete
+    must generate a flag with exactly that default (the n_epochs 5-vs-3
+    drift trained silently different models).  None-defaulted fields
+    (n_agents, gamma) are the one sanctioned exception: the CLI has to
+    pick a concrete value where the spec derives one."""
+    from repro.fed import api
+
+    classes = {"spec": FedSpec, "privacy": PrivacySpec,
+               "compression": CompressionSpec}
+    for owner, name, flag, _, kwargs in api._cli_entries():
+        fields = {f.name: f for f in dataclasses.fields(classes[owner])}
+        default = fields[name].default
+        if default is None or default is dataclasses.MISSING:
+            continue
+        assert kwargs["default"] == default, (
+            f"{flag} defaults to {kwargs['default']!r} but "
+            f"{classes[owner].__name__}.{name} defaults to {default!r}")
+    # the drift this guards against, end to end:
+    assert spec_from_args([]).n_epochs == FedSpec().n_epochs
+
+
 def test_cli_agd_with_tau_fails_fast():
     spec = spec_from_args(["--tau", "0.3", "--solver", "agd"])
     with pytest.raises(ValueError, match="gd-type solver, not 'agd'"):
@@ -277,6 +300,47 @@ def test_registered_compressor_usable_by_name(quad):
     assert calls, "registered compressor was never dispatched"
     assert np.isfinite(np.asarray(crit)).all()
     assert state.t is not None
+
+
+def test_topk_transmits_exactly_k_on_ties():
+    """Magnitude ties must not inflate the uplink: a threshold-select
+    keeps EVERY tied coordinate (an all-constant increment would
+    transmit all m entries at a k/m bandwidth budget)."""
+    cfg = type("C", (), {"compress_ratio": 0.25,
+                         "compress_energy": 0.95})()
+    m = 16
+    k = int(0.25 * m)
+    rows = jnp.stack([jnp.ones(m),                 # all-tied constants
+                      jnp.zeros(m),                # all-zero increment
+                      -3.0 * jnp.ones(m)])         # tied negatives
+    out = get_compressor("topk")(rows, cfg)
+    kept = np.asarray((out != 0).sum(axis=-1))
+    assert kept[0] == k
+    assert kept[1] == 0                             # zeros transmit zeros
+    assert kept[2] == k
+    # surviving entries are the original values, untouched
+    np.testing.assert_array_equal(np.asarray(out[0][out[0] != 0]),
+                                  np.ones(k))
+
+
+def test_adaptive_topk_transmits_exactly_k_on_ties():
+    """Same tie discipline for the adaptive compressor: an all-constant
+    row at a 0.5 energy target needs ceil(m/2) coordinates -- the old
+    threshold-select transmitted all m of them."""
+    cfg = type("C", (), {"compress_ratio": 1.0 / 16.0,
+                         "compress_energy": 0.5})()
+    m = 16
+    out = get_compressor("adaptive_topk")(jnp.stack([jnp.ones(m)]), cfg)
+    kept = int(np.asarray((out != 0).sum(axis=-1))[0])
+    assert kept == 8   # smallest prefix with >= 50% energy, not m
+
+
+def test_topk_no_ties_keeps_top_magnitudes():
+    cfg = type("C", (), {"compress_ratio": 0.5, "compress_energy": 0.95})()
+    row = jnp.array([[0.1, -5.0, 2.0, 0.01, 3.0, -0.2]])
+    out = get_compressor("topk")(row, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(out[0]), [0.0, -5.0, 2.0, 0.0, 3.0, 0.0])
 
 
 def test_adaptive_topk_ratio_is_per_agent():

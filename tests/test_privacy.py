@@ -65,6 +65,28 @@ def test_calibration_inverse(target_eps):
     assert eps <= target_eps * 1.01
 
 
+def test_calibration_unreachable_target_raises():
+    """Lemma 5 floors ADP eps at log(1/delta)/(lam-1) over the searched
+    Renyi orders: a target below that floor must raise (stating the
+    achievable eps), never silently return a tau that misses it."""
+    with pytest.raises(ValueError, match="unreachable.*achievable "
+                                         "eps=[0-9.e-]+"):
+        privacy.calibrate_noise(1e-4, 1e-5, 1.0, 0.5, 250, 0.1, 100, 5)
+
+
 def test_privacy_report():
     rep = privacy.PrivacyReport.build(1.0, 0.5, 0.1, 250, 0.1, 100, 5)
     assert rep.adp_eps > 0 and rep.eps_ceiling >= rep.adp_eps * 0.99
+    assert rep.per_agent is None
+
+
+def test_per_agent_report_max_and_rows():
+    qs = [50, 100, 400]
+    rep = privacy.PrivacyReport.build_per_agent(
+        sensitivities=[1.0] * 3, mu=0.5, tau=0.1, qs=qs,
+        gammas=[0.1] * 3, K=100, n_epochs_seq=[5, 5, 5])
+    eps = [a.adp_eps for a in rep.per_agent]
+    assert rep.adp_eps == max(eps)            # headline = worst agent
+    assert eps[0] > eps[1] > eps[2]           # monotone in q_i
+    assert rep.n_epochs == rep.per_agent[0].n_epochs
+    assert rep.eps_ceiling >= rep.adp_eps
