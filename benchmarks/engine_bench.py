@@ -56,6 +56,11 @@ def run(quick=True):
         ("int8", dict(compression=CompressionSpec("int8")), 4.0),
         ("adaptive", dict(compression=CompressionSpec(
             "adaptive_topk", ratio=0.25, energy=0.9)), 4.0),
+        # same compressor through the packed fused-kernel path: one
+        # launch for the whole pytree, one sort instead of two per leaf
+        ("adaptive_pallas", dict(compression=CompressionSpec(
+            "adaptive_topk", ratio=0.25, energy=0.9,
+            backend="pallas")), 4.0),
         # heterogeneous groups: half the agents run AGD, half run one
         # cheap GD epoch -- measures the sequential group-dispatch cost
         ("hetero_gd_agd", dict(

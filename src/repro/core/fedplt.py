@@ -55,6 +55,7 @@ class FedPLTConfig:
     compression: str = "none"         # compressor registry name
     compress_ratio: float = 0.25      # top-k fraction kept
     compress_energy: float = 0.95     # adaptive_topk per-agent target
+    compress_backend: str = "xla"     # "xla" per-leaf | "pallas" packed
     # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges (see tests)
@@ -81,7 +82,8 @@ class FedPLTConfig:
                                     dp_init=self.dp_init),
             compression=api.CompressionSpec(
                 name=self.compression, ratio=self.compress_ratio,
-                energy=self.compress_energy))
+                energy=self.compress_energy,
+                backend=self.compress_backend))
 
 
 class FedPLT:
@@ -126,7 +128,8 @@ class FedPLT:
             damping=config.damping,
             compression=config.compression,
             compress_ratio=config.compress_ratio,
-            compress_energy=config.compress_energy)
+            compress_energy=config.compress_energy,
+            compress_backend=config.compress_backend)
         if solver_groups is None:
             # the homogeneous path is the single full-size group; a
             # [0:N] slice is a no-op, so this is bit-identical to the

@@ -41,7 +41,8 @@ import jax
 from repro.core import prox as prox_lib
 from repro.core.solvers import SolverConfig
 from repro.fed import engine
-from repro.fed.compress import available_compressors, get_compressor
+from repro.fed.compress import (COMPRESS_BACKENDS, available_compressors,
+                                get_compressor)
 from repro.fed.solvers import get_solver
 
 
@@ -106,6 +107,12 @@ class CompressionSpec:
     energy: float = dataclasses.field(default=0.95, metadata=_cli(
         flag="--compress-energy",
         help="adaptive_topk per-agent energy target"))
+    # "pallas": pack all leaves into one (N, M_total) buffer and run the
+    # fused repro.kernels.compress kernels once per round (bit-identical
+    # to the per-leaf "xla" path; compressors without a kernel fall back)
+    backend: str = dataclasses.field(default="xla", metadata=_cli(
+        flag="--compress-backend", choices=["xla", "pallas"],
+        help="uplink compressor backend (pallas = fused packed kernels)"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,7 +306,8 @@ class FedSpec:
             damping=self.damping,
             compression=self.compression.name,
             compress_ratio=self.compression.ratio,
-            compress_energy=self.compression.energy)
+            compress_energy=self.compression.energy,
+            compress_backend=self.compression.backend)
 
     def moduli_for(self, gamma: Optional[float]) \
             -> tuple[float, Optional[float]]:
@@ -364,6 +372,10 @@ class FedSpec:
             raise ValueError("compress ratio must be in (0, 1]")
         if not 0.0 < self.compression.energy <= 1.0:
             raise ValueError("compress energy must be in (0, 1]")
+        if self.compression.backend not in COMPRESS_BACKENDS:
+            raise ValueError(
+                f"unknown compress backend {self.compression.backend!r}; "
+                f"known: {', '.join(COMPRESS_BACKENDS)}")
         if self.weight_decay < 0.0:
             raise ValueError("weight_decay must be >= 0")
         if self.weight_decay != 0.0 and self.prox_h not in (
@@ -440,6 +452,7 @@ class FedSpec:
             compression=self.compression.name,
             compress_ratio=self.compression.ratio,
             compress_energy=self.compression.energy,
+            compress_backend=self.compression.backend,
             damping=self.damping)
 
 

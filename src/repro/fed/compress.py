@@ -21,11 +21,22 @@ dispatches through this registry, never through hard-coded branches.
 The registered function receives the :class:`repro.fed.engine.RoundConfig`
 (duck-typed: it only reads ``compress_ratio`` / ``compress_energy``) and
 must preserve shape and dtype.
+
+Backends: the registry functions are the XLA reference path.  With
+``cfg.compress_backend == "pallas"`` the accelerated compressors
+(:data:`PALLAS_COMPRESSORS`) instead run the fused
+:mod:`repro.kernels.compress` kernels, and ``compress_increment`` packs
+ALL pytree leaves into one ``(N, M_total)`` buffer
+(:func:`pack_leaves`) so the whole round's uplink is ONE kernel launch
+with segment-aware per-(agent, leaf) scales -- bit-identical to the
+per-leaf XLA path (asserted in tests).  Compressors without a kernel
+(custom registry entries, ``none``) fall back to the per-leaf XLA path
+under either backend.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +45,13 @@ import jax.numpy as jnp
 CompressFn = Callable[[jnp.ndarray, Any], jnp.ndarray]
 
 _REGISTRY: Dict[str, CompressFn] = {}
+
+COMPRESS_BACKENDS = ("xla", "pallas")
+# registry names with a fused kernel implementation
+PALLAS_COMPRESSORS = frozenset({"topk", "adaptive_topk", "int8"})
+
+# column alignment of the packed buffer (TPU lane width)
+_LANE = 128
 
 
 def register_compressor(name: str) -> Callable[[CompressFn], CompressFn]:
@@ -59,15 +77,110 @@ def available_compressors() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def _backend_of(cfg) -> str:
+    backend = getattr(cfg, "compress_backend", "xla")
+    if backend not in COMPRESS_BACKENDS:
+        raise ValueError(f"unknown compress backend {backend!r}; known: "
+                         f"{', '.join(COMPRESS_BACKENDS)}")
+    return backend
+
+
+def _use_pallas(cfg) -> bool:
+    return (_backend_of(cfg) == "pallas"
+            and cfg.compression in PALLAS_COMPRESSORS)
+
+
+def _pallas_rows(dz: jnp.ndarray, cfg, segments=None) -> jnp.ndarray:
+    """The fused-kernel compressor on an (N, m) buffer (optionally with
+    per-leaf column segments)."""
+    from repro.kernels.compress import ops
+
+    name = cfg.compression
+    if name == "int8":
+        return ops.int8_quantize(dz, segments=segments)
+    return ops.rank_select(dz, segments=segments, mode=name,
+                           ratio=cfg.compress_ratio,
+                           energy=cfg.compress_energy)
+
+
 def compress_rows(dz: jnp.ndarray, cfg) -> jnp.ndarray:
     """Dispatch the configured compressor on a flattened (N, m) increment."""
+    if _use_pallas(cfg):
+        return _pallas_rows(dz, cfg)
     return get_compressor(cfg.compression)(dz, cfg)
 
 
+# ---------------------------------------------------------------------------
+# Leaf packing: the whole pytree as one (N, M_total) buffer
+# ---------------------------------------------------------------------------
+
+class PackedMeta(NamedTuple):
+    """Static layout of a packed agent-stacked pytree: everything needed
+    to invert :func:`pack_leaves` and to hand the kernels their static
+    per-leaf column segments."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]      # per-leaf (N, ...) shapes
+    segments: Tuple[Tuple[int, int], ...]    # per-leaf (start, stop) cols
+    width: int                               # padded column count
+
+
+def pack_leaves(tree: Any) -> Tuple[jnp.ndarray, PackedMeta]:
+    """Flatten every ``(N, ...)`` leaf and concatenate along columns into
+    one ``(N, M_total)`` buffer (padded to the TPU lane width), recording
+    per-leaf segment offsets.  All leaves must share the agent axis and
+    dtype (the uplink buffer is one wire format)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("pack_leaves: empty pytree")
+    n = leaves[0].shape[0]
+    dtype = leaves[0].dtype
+    for l in leaves:
+        if l.shape[0] != n or l.dtype != dtype:
+            raise ValueError(
+                "pack_leaves needs a uniform agent axis and dtype, got "
+                f"{[(tuple(x.shape), str(x.dtype)) for x in leaves]}")
+    flat = [l.reshape(n, -1) for l in leaves]
+    segments, start = [], 0
+    for f in flat:
+        segments.append((start, start + f.shape[1]))
+        start += f.shape[1]
+    width = -(-start // _LANE) * _LANE
+    if width > start:
+        flat.append(jnp.zeros((n, width - start), dtype))
+    buf = jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
+    return buf, PackedMeta(treedef=treedef,
+                           shapes=tuple(tuple(l.shape) for l in leaves),
+                           segments=tuple(segments), width=width)
+
+
+def unpack_leaves(buf: jnp.ndarray, meta: PackedMeta) -> Any:
+    """Invert :func:`pack_leaves` (padding columns are dropped)."""
+    leaves = [buf[:, s0:s1].reshape(shape)
+              for (s0, s1), shape in zip(meta.segments, meta.shapes)]
+    return jax.tree_util.tree_unflatten(meta.treedef, leaves)
+
+
 def compress_increment(dz: Any, cfg) -> Any:
-    """Apply the configured compressor leaf-wise (each leaf is flattened
-    to (N, m): top-k / int8 scales are per agent per leaf, which is what
-    an actual uplink would quantize)."""
+    """Apply the configured compressor to a stacked increment pytree
+    (top-k / int8 scales are per agent per leaf, which is what an actual
+    uplink would quantize).
+
+    XLA backend: leaf-wise, each leaf flattened to (N, m) -- one sort
+    launch per leaf.  Pallas backend (accelerated compressors only):
+    leaves are packed into one (N, M_total) buffer and the fused
+    segment-aware kernel runs ONCE per round; bit-identical output."""
+    if _use_pallas(cfg):
+        leaves = jax.tree_util.tree_leaves(dz)
+        uniform = len({(l.shape[0], jnp.result_type(l)) for l in leaves}) == 1
+        if uniform:
+            buf, meta = pack_leaves(dz)
+            return unpack_leaves(_pallas_rows(buf, cfg, meta.segments),
+                                 meta)
+        # mixed-dtype trees have no single wire format: per-leaf kernels
+        return jax.tree_util.tree_map(
+            lambda l: _pallas_rows(l.reshape(l.shape[0], -1),
+                                   cfg).reshape(l.shape), dz)
     fn = get_compressor(cfg.compression)
 
     def leaf(l):

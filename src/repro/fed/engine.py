@@ -40,6 +40,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.fed import compress as compress_lib
 from repro.fed.compress import compress_increment, get_compressor
 
 tree_map = jax.tree_util.tree_map
@@ -95,9 +96,18 @@ class RoundConfig:
     compression: str = "none"
     compress_ratio: float = 0.25      # top-k fraction kept (floor for adaptive)
     compress_energy: float = 0.95     # adaptive_topk per-agent energy target
+    # "xla" = per-leaf registry compressors; "pallas" = packed agent-axis
+    # buffer through the fused repro.kernels.compress kernels (one launch
+    # per round, bit-identical output; non-accelerated compressors fall
+    # back to the per-leaf path)
+    compress_backend: str = "xla"
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
+        if self.compress_backend not in compress_lib.COMPRESS_BACKENDS:
+            raise ValueError(
+                f"unknown compress backend {self.compress_backend!r}; "
+                f"known: {', '.join(compress_lib.COMPRESS_BACKENDS)}")
         p = self.participation
         if isinstance(p, (list, tuple)) or hasattr(p, "__len__"):
             p = tuple(float(x) for x in p)

@@ -72,6 +72,7 @@ class FedConfig:
     L: float = 0.0
     compression: str = "none"        # z-uplink compressor registry name
     compress_ratio: float = 0.25
+    compress_backend: str = "xla"    # "xla" per-leaf | "pallas" packed
     damping: float = 1.0             # Krasnosel'skii relaxation
 
     def to_spec(self) -> FedSpec:
@@ -86,7 +87,8 @@ class FedConfig:
             weight_decay=self.weight_decay,
             privacy=PrivacySpec(tau=self.tau, clip=self.clip),
             compression=CompressionSpec(name=self.compression,
-                                        ratio=self.compress_ratio),
+                                        ratio=self.compress_ratio,
+                                        backend=self.compress_backend),
             use_pallas=self.use_pallas_update)
 
 

@@ -7,6 +7,10 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
   fedplt_update   -- the paper's fused local training step (elementwise,
                      3 reads 1 write, optional DP noise) -- the deployed
                      algorithm's per-parameter hot loop.
+  compress        -- fused uplink-compression kernels (per-segment
+                     magnitude-rank select for topk/adaptive_topk, int8
+                     quantize-dequantize) over the packed agent-axis
+                     buffer of repro.fed.compress.pack_leaves.
   flash_attention -- blockwise online-softmax attention with GQA,
                      sliding window and logit softcap (model hot spot).
   lru_scan        -- chunked diagonal linear recurrence (RG-LRU / mamba
