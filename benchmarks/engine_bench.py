@@ -1,8 +1,9 @@
-"""Unified round-engine benchmark: fused vs unfused local epochs and
-compressed vs uncompressed round wall-time at model scale.
+"""Unified round-engine benchmark: fused vs unfused local epochs,
+compressed vs uncompressed rounds, and the fused round-edge kernels.
 
-Times one jitted Fed-PLT round of a reduced transformer through
-``fed/runtime.py`` (i.e. through ``fed/engine.py``) for:
+Part 1 (rounds): times one jitted Fed-PLT round of a reduced
+transformer through ``fed/runtime.py`` (i.e. through
+``fed/engine.py``) for:
 
   * baseline           -- gd local epochs, exact z-exchange
   * pallas_fused       -- fedplt_update fused local step (NOTE: interpret
@@ -12,18 +13,79 @@ Times one jitted Fed-PLT round of a reduced transformer through
                           compressor to the round's critical path; the
                           quantity bought is uplink bytes, reported as
                           the compression ratio column)
+  * pallas_edges       -- the fused round-edge backend end to end
 
-Rows: ``engine,<name>,<ms/round>,<rel to baseline>,<uplink ratio>``.
+Part 2 (round edges): the coordinator edge (prox + reflect; z-update +
+participation selects) at ENGINE SCALE -- N >= 32 agents on a ragged
+multi-leaf tree -- measured three ways:
+
+  * per-backend edge wall time through ``engine.coordinator_edge`` /
+    ``engine.agent_edge`` (the shipped paths; on this CPU container the
+    packed path pays pack/unpack concatenation and interpret-emulation
+    overhead that a TPU does not, so treat these as correctness-path
+    numbers, like the other interpret-mode rows);
+  * STRUCTURE: jaxpr ops of the XLA edge vs pallas_call launches of the
+    fused edge -- the committed baseline asserts the coordinator edge
+    collapses to TWO kernel launches;
+  * LAUNCH-GRANULAR speedup: the edge arithmetic executed as one
+    jitted launch per op per leaf (the xla backend's own granularity --
+    the HBM round-trips + dispatches an unfused schedule pays between
+    launches) vs the two fused kernels -- a real measurement of what
+    the fusion removes, CPU-measurable because each jitted call is a
+    genuine executable with genuine memory round-trips.  A second
+    bracket (per-op launches on the already-packed buffer) isolates
+    how much of the win is packing vs fusing.
+
+``run`` returns ``(rows, payload)``: CSV rows plus the JSON-able dict
+``benchmarks.run --json`` writes (committed baseline:
+``BENCH_engine.json``), so future PRs can regress per-case wall times,
+launch counts, and the launch-granular speedup.
 """
 
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import InputShape
+from repro.core import prox as prox_lib
 from repro.data.synthetic import make_batch_for
+from repro.fed import engine
 from repro.fed.api import CompressionSpec, FedSpec, build_trainer
+from repro.kernels.round_edge import ops as edge_ops
+
+# engine-scale round-edge case: agents x ragged transformer-like leaves
+EDGE_N_AGENTS = 64
+EDGE_WIDTHS = (1024, 256, 256, 64, 512, 512, 64, 16) * 25   # 200 leaves
+
+
+def _best_ms(fn, args, iters, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e3)
+    return best
+
+
+def _count_prims(jaxpr, name):
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        for v in eqn.params.values():
+            for vv in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(vv, "jaxpr", None)
+                if inner is not None:
+                    total += _count_prims(inner, name)
+                elif hasattr(vv, "eqns"):
+                    total += _count_prims(vv, name)
+    return total
 
 
 def _bench_round(cfg, model, spec, iters):
@@ -41,7 +103,7 @@ def _bench_round(cfg, model, spec, iters):
     return (time.perf_counter() - t0) / iters * 1e3  # ms
 
 
-def run(quick=True):
+def _rounds(quick):
     iters = 3 if quick else 10
     cfg = get_config("gemma2-2b").reduced()
     from repro.models.model import build_model
@@ -65,8 +127,12 @@ def run(quick=True):
         # cheap GD epoch -- measures the sequential group-dispatch cost
         ("hetero_gd_agd", dict(
             agent_groups="1*agd,1*gd:n_epochs=1"), 1.0),
+        # fused round-edge backend end to end (weight decay exercises
+        # the in-kernel prox)
+        ("pallas_edges", dict(engine_backend="pallas",
+                              weight_decay=0.01), 1.0),
     ]
-    rows = []
+    rows, payload = [], []
     ms0 = None
     for name, kw, uplink in cases:
         spec = FedSpec(**base, **kw)
@@ -75,4 +141,143 @@ def run(quick=True):
             ms0 = ms
         rows.append(f"engine,{name},{ms:.1f},{ms / ms0:.2f}x,"
                     f"uplink/{uplink:.0f}")
-    return rows
+        payload.append(dict(kind="round", case=name, ms_per_round=ms,
+                            rel_to_baseline=ms / ms0,
+                            uplink_ratio=uplink))
+    return rows, payload
+
+
+def _edge_trees():
+    key = jax.random.PRNGKey(0)
+    tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (EDGE_N_AGENTS, w))
+            for i, w in enumerate(EDGE_WIDTHS)}
+    x = tree
+    w = {k: 0.9 * v for k, v in tree.items()}
+    z = {k: 1.1 * v for k, v in tree.items()}
+    u = jax.random.bernoulli(key, 0.7,
+                             (EDGE_N_AGENTS,)).astype(jnp.float32)
+    return x, w, z, u
+
+
+def _edges(backend, prox):
+    cfg = engine.RoundConfig(n_agents=EDGE_N_AGENTS, rho=1.0,
+                             damping=0.5, engine_backend=backend)
+
+    def f(x, w, z, u):
+        y, v = engine.coordinator_edge(cfg, z, z, prox)
+        xn, zn = engine.agent_edge(cfg, u, w, x, z, y, z, prox)
+        return v, xn, zn
+
+    return f
+
+
+def _round_edge(quick):
+    iters = 5 if quick else 20
+    prox = prox_lib.make_prox("weight_decay", weight=0.1)
+    x, w, z, u = _edge_trees()
+    m_total = int(sum(EDGE_WIDTHS))
+    shape_s = f"N={EDGE_N_AGENTS};m={m_total};leaves={len(EDGE_WIDTHS)}"
+    rows, payload = [], []
+
+    # -- per-backend edge wall time + structure -------------------------
+    # launch counts come from the TPU-shaped (interpret=False) trace --
+    # abstract eval only, safe on CPU; the CPU default executes the same
+    # kernel bodies directly when the grid is one program
+    width = -(-m_total // 128) * 128
+    zt = jnp.zeros((EDGE_N_AGENTS, width))
+    ut = jnp.zeros((EDGE_N_AGENTS,))
+
+    def tpu_edges(x_, w_, z_, u_):
+        _, v = edge_ops.round_uplink(z_, prox=prox,
+                                     rho_eff=1.0 / EDGE_N_AGENTS,
+                                     interpret=False)
+        xn, zn = edge_ops.round_downlink(x_, w_, z_, u_, prox=prox,
+                                         rho_eff=1.0 / EDGE_N_AGENTS,
+                                         damping=0.5, interpret=False)
+        return v, xn, zn
+
+    fused_launches = _count_prims(
+        jax.make_jaxpr(tpu_edges)(zt, zt, zt, ut).jaxpr, "pallas_call")
+
+    ms = {}
+    for backend in ("xla", "pallas"):
+        f = _edges(backend, prox)
+        ms[backend] = _best_ms(jax.jit(f), (x, w, z, u), iters)
+        n_ops = len(jax.make_jaxpr(f)(x, w, z, u).jaxpr.eqns)
+        launches = fused_launches if backend == "pallas" else 0
+        # distinct labels: "launches=" is the TPU-schedule pallas_call
+        # count (a 0 here is a regression, never substituted), "ops="
+        # the per-leaf path's jaxpr equation count
+        detail = (f"launches={launches}" if backend == "pallas"
+                  else f"ops={n_ops}")
+        rows.append(f"engine,edge:{backend},{ms[backend]:.2f},"
+                    f"{detail},{shape_s}")
+        payload.append(dict(
+            kind="edge", backend=backend, ms_per_edge_pair=ms[backend],
+            pallas_launches=launches, jaxpr_ops=n_ops,
+            n_agents=EDGE_N_AGENTS, m_total=m_total,
+            n_leaves=len(EDGE_WIDTHS)))
+
+    # -- launch-granular: the unfused schedule (one jitted executable
+    # per op = one launch + HBM round-trip each) vs the two fused
+    # kernels.  Two unfused brackets: per-leaf per-op launches (the xla
+    # backend's own granularity -- ~7 launches x n_leaves) and per-op
+    # launches on the already-packed buffer (the launch floor an
+    # unfused schedule could reach with packing but no fusion).
+    key = jax.random.PRNGKey(1)
+    zb = jax.random.normal(key, (EDGE_N_AGENTS, width))
+    xb, wb = 0.9 * zb, 1.1 * zb
+    rho_eff, damping = 1.0 / EDGE_N_AGENTS, 0.5
+
+    mean_f = jax.jit(lambda z: jnp.mean(z, axis=0))
+    prox_f = jax.jit(lambda zb_: prox(zb_, rho_eff))
+    refl_f = jax.jit(lambda y, z: 2.0 * y[None] - z)
+    zupd_f = jax.jit(lambda z, w_, y: z + 2.0 * damping * (w_ - y[None]))
+    sel_f = jax.jit(lambda u_, a, b: jnp.where(
+        (u_ != 0).reshape(-1, 1), a, b))
+
+    def unfused_ops(x_, w_, z_, u_):
+        zbar = mean_f(z_)
+        y = prox_f(zbar)
+        v = refl_f(y, z_)
+        zu = zupd_f(z_, w_, y)
+        return v, sel_f(u_, w_, x_), sel_f(u_, zu, z_)
+
+    def unfused_per_leaf(x_, w_, z_, u_):
+        return [unfused_ops(x_[k], w_[k], z_[k], u_) for k in z_]
+
+    def fused(x_, w_, z_, u_):
+        _, v = edge_ops.round_uplink(z_, prox=prox, rho_eff=rho_eff)
+        xn, zn = edge_ops.round_downlink(x_, w_, z_, u_, prox=prox,
+                                         rho_eff=rho_eff,
+                                         damping=damping)
+        return v, xn, zn
+
+    ms_leaf = _best_ms(unfused_per_leaf, (x, w, z, u), iters)
+    ms_packed = _best_ms(unfused_ops, (xb, wb, zb, u), iters)
+    ms_fused = _best_ms(fused, (xb, wb, zb, u), iters)
+    speedup = ms_leaf / ms_fused
+    rows.append(f"engine,edge:launch_granular,{ms_fused:.2f},"
+                f"{speedup:.2f}x,{shape_s}")
+    payload.append(dict(
+        kind="edge_launch",
+        ms_unfused_per_leaf_launches=ms_leaf,
+        ms_unfused_packed_launches=ms_packed,
+        ms_fused_kernels=ms_fused, speedup=speedup,
+        unfused_launches=7 * len(EDGE_WIDTHS), fused_launches=2,
+        n_agents=EDGE_N_AGENTS, m_total=m_total,
+        n_leaves=len(EDGE_WIDTHS)))
+    return rows, payload
+
+
+def run(quick=True):
+    round_rows, round_payload = _rounds(quick)
+    edge_rows, edge_payload = _round_edge(quick)
+    payload = {"cases": round_payload + edge_payload,
+               "quick": bool(quick)}
+    return round_rows + edge_rows, payload
+
+
+if __name__ == "__main__":
+    print("\n".join(run()[0]))

@@ -56,6 +56,7 @@ class FedPLTConfig:
     compress_ratio: float = 0.25      # top-k fraction kept
     compress_energy: float = 0.95     # adaptive_topk per-agent target
     compress_backend: str = "xla"     # "xla" per-leaf | "pallas" packed
+    engine_backend: str = "xla"       # round edges: "xla" | "pallas" fused
     # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges (see tests)
@@ -83,7 +84,8 @@ class FedPLTConfig:
             compression=api.CompressionSpec(
                 name=self.compression, ratio=self.compress_ratio,
                 energy=self.compress_energy,
-                backend=self.compress_backend))
+                backend=self.compress_backend),
+            engine_backend=self.engine_backend)
 
 
 class FedPLT:
@@ -129,7 +131,8 @@ class FedPLT:
             compression=config.compression,
             compress_ratio=config.compress_ratio,
             compress_energy=config.compress_energy,
-            compress_backend=config.compress_backend)
+            compress_backend=config.compress_backend,
+            engine_backend=config.engine_backend)
         if solver_groups is None:
             # the homogeneous path is the single full-size group; a
             # [0:N] slice is a no-op, so this is bit-identical to the

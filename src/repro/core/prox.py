@@ -18,26 +18,64 @@ import jax.numpy as jnp
 ProxFn = Callable[[jnp.ndarray, float], jnp.ndarray]
 
 
+def _elementwise(fn):
+    """Tag a prox as elementwise: applied independently per coordinate
+    with only static parameters.  The round engine reads this tag to
+    decide whether the prox may be traced into the fused round-edge
+    Pallas kernel (:mod:`repro.kernels.round_edge`); untagged custom
+    callables always take the XLA path."""
+    fn.elementwise = True
+    return fn
+
+
+def _pin_scale(c, like):
+    """A shrinkage factor as an XLA-OPAQUE scalar of ``like``'s dtype.
+
+    The algebraic simplifier folds adjacent multiplicative constants
+    (the agent-mean's 1/N, step sizes, a scan-fused criterion) into the
+    prox scale -- and whether it does depends on the surrounding
+    program and even on array shapes, so the same prox would round
+    differently in the unfused engine path, the fused round-edge
+    kernel, and a scan body.  Hiding the scale behind an optimization
+    barrier makes the shrinkage exactly ``round(y * c)`` in every
+    context, which is what keeps ``engine_backend`` trajectories
+    bit-identical."""
+    return jax.lax.optimization_barrier(
+        jnp.asarray(c, jnp.result_type(like)))
+
+
 # ---------------------------------------------------------------------------
 # Elementary proximal operators
 # ---------------------------------------------------------------------------
 
+@_elementwise
 def prox_zero(y: jnp.ndarray, rho: float) -> jnp.ndarray:
     """prox of h = 0 (smooth problems): identity."""
     del rho
     return y
 
 
+@_elementwise
 def prox_l1(y: jnp.ndarray, rho: float) -> jnp.ndarray:
     """Soft-thresholding: prox of h(x) = ||x||_1."""
     return jnp.sign(y) * jnp.maximum(jnp.abs(y) - rho, 0.0)
 
 
+@_elementwise
 def prox_l2sq(y: jnp.ndarray, rho: float) -> jnp.ndarray:
-    """prox of h(x) = ||x||^2 / 2: shrinkage."""
-    return y / (1.0 + rho)
+    """prox of h(x) = ||x||^2 / 2: shrinkage.
+
+    Multiplication by the PINNED reciprocal, NOT division: XLA rewrites
+    division-by-constant into reciprocal multiplies fusion-dependently,
+    and folds a bare multiplicative constant into its neighbors (see
+    :func:`_pin_scale`) -- either would make the shrinkage's bits
+    depend on the surrounding program and break the bitwise parity
+    between the per-leaf and fused round-edge backends.  Same for every
+    shrinking prox below."""
+    return y * _pin_scale(1.0 / (1.0 + rho), y)
 
 
+@_elementwise
 def prox_weight_decay(y: jnp.ndarray, rho: float,
                       weight: float = 0.0) -> jnp.ndarray:
     """prox of h(x) = (weight/2) ||x||^2: shrinkage by 1/(1 + weight rho).
@@ -45,15 +83,17 @@ def prox_weight_decay(y: jnp.ndarray, rho: float,
     The model-scale coordinator's weight decay -- registered here so the
     dense and model front ends share one ProxH convention (weight = 0 is
     the identity, i.e. h = 0)."""
-    return y / (1.0 + weight * rho)
+    return y * _pin_scale(1.0 / (1.0 + weight * rho), y)
 
 
+@_elementwise
 def prox_elastic_net(y: jnp.ndarray, rho: float, l1: float = 1.0,
                      l2: float = 1.0) -> jnp.ndarray:
     """prox of h(x) = l1 ||x||_1 + (l2/2) ||x||^2."""
-    return prox_l1(y, rho * l1) / (1.0 + rho * l2)
+    return prox_l1(y, rho * l1) * _pin_scale(1.0 / (1.0 + rho * l2), y)
 
 
+@_elementwise
 def prox_box(y: jnp.ndarray, rho: float, lo: float = -1.0,
              hi: float = 1.0) -> jnp.ndarray:
     """prox of the indicator of a box = projection (rho-independent)."""
@@ -61,6 +101,7 @@ def prox_box(y: jnp.ndarray, rho: float, lo: float = -1.0,
     return jnp.clip(y, lo, hi)
 
 
+@_elementwise
 def prox_linf_ball(y: jnp.ndarray, rho: float, radius: float = 1.0):
     """Projection onto the l-inf ball."""
     del rho
@@ -82,7 +123,12 @@ def make_prox(name: str, **kw) -> ProxFn:
         raise ValueError(f"unknown prox {name!r}; registered: "
                          f"{', '.join(sorted(table))}")
     if kw:
-        return lambda y, rho: fn(y, rho, **kw)
+        def bound(y, rho):
+            return fn(y, rho, **kw)
+        # binding static kwargs preserves elementwise-ness (the fused
+        # round-edge kernel eligibility travels with the callable)
+        bound.elementwise = getattr(fn, "elementwise", False)
+        return bound
     return fn
 
 
@@ -91,10 +137,17 @@ def make_prox(name: str, **kw) -> ProxFn:
 # ---------------------------------------------------------------------------
 
 def reflect(prox: ProxFn) -> ProxFn:
-    """Reflective operator refl_{rho f}(y) = 2 prox_{rho f}(y) - y."""
+    """Reflective operator refl_{rho f}(y) = 2 prox_{rho f}(y) - y.
+
+    The reflection formula itself lives in the round engine
+    (:func:`repro.fed.engine.reflect` -- the single source of the round
+    topology); this combinator evaluates it on a single-agent stack.
+    """
 
     def refl(y: jnp.ndarray, rho: float) -> jnp.ndarray:
-        return 2.0 * prox(y, rho) - y
+        from repro.fed import engine
+
+        return engine.reflect(prox(y, rho), y[None])[0]
 
     return refl
 
@@ -136,6 +189,11 @@ def coordinator_prox(z: jnp.ndarray, rho: float, prox_h: ProxFn) -> jnp.ndarray:
     """``y = prox_{rho h / N}(mean_i z_i)`` for stacked ``z`` of shape (N, n).
 
     Returns the (single, shared) coordinator model y of shape (n,).
+    Back-compat re-export: the implementation is
+    :func:`repro.fed.engine.coordinator_prox` (the single source of the
+    round topology), of which the dense array is the single-leaf case.
     """
-    n_agents = z.shape[0]
-    return prox_h(jnp.mean(z, axis=0), rho / n_agents)
+    from repro.fed import engine
+
+    return engine.coordinator_prox(
+        z, engine.RoundConfig(n_agents=z.shape[0], rho=rho), prox_h)

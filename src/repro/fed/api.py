@@ -236,6 +236,15 @@ class FedSpec:
     use_pallas: bool = dataclasses.field(default=False, metadata=_cli(
         flag="--use-pallas-update",
         help="fused fedplt_update kernel for the local step"))
+    # "pallas": run the round's coordinator edges (prox + reflect;
+    # z-update + participation selects) as the two fused
+    # repro.kernels.round_edge launches on the packed (N, M_total)
+    # buffer (fp32-rounding-identical to the per-leaf "xla" path --
+    # parity contract in repro.fed.engine; custom non-elementwise
+    # proxes and mixed-dtype trees fall back per edge)
+    engine_backend: str = dataclasses.field(default="xla", metadata=_cli(
+        flag="--engine-backend", choices=["xla", "pallas"],
+        help="round-edge backend (pallas = fused packed kernels)"))
 
     def __post_init__(self):
         groups = self.agent_groups
@@ -307,7 +316,8 @@ class FedSpec:
             compression=self.compression.name,
             compress_ratio=self.compression.ratio,
             compress_energy=self.compression.energy,
-            compress_backend=self.compression.backend)
+            compress_backend=self.compression.backend,
+            engine_backend=self.engine_backend)
 
     def moduli_for(self, gamma: Optional[float]) \
             -> tuple[float, Optional[float]]:
@@ -376,6 +386,10 @@ class FedSpec:
             raise ValueError(
                 f"unknown compress backend {self.compression.backend!r}; "
                 f"known: {', '.join(COMPRESS_BACKENDS)}")
+        if self.engine_backend not in engine.ENGINE_BACKENDS:
+            raise ValueError(
+                f"unknown engine backend {self.engine_backend!r}; "
+                f"known: {', '.join(engine.ENGINE_BACKENDS)}")
         if self.weight_decay < 0.0:
             raise ValueError("weight_decay must be >= 0")
         if self.weight_decay != 0.0 and self.prox_h not in (
@@ -453,6 +467,7 @@ class FedSpec:
             compress_ratio=self.compression.ratio,
             compress_energy=self.compression.energy,
             compress_backend=self.compression.backend,
+            engine_backend=self.engine_backend,
             damping=self.damping)
 
 

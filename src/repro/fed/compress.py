@@ -146,9 +146,17 @@ def pack_leaves(tree: Any) -> Tuple[jnp.ndarray, PackedMeta]:
         segments.append((start, start + f.shape[1]))
         start += f.shape[1]
     width = -(-start // _LANE) * _LANE
-    if width > start:
-        flat.append(jnp.zeros((n, width - start), dtype))
-    buf = jnp.concatenate(flat, axis=1) if len(flat) > 1 else flat[0]
+    if len(flat) == 1 and width == start:
+        buf = flat[0]
+    else:
+        # write each leaf into a preallocated buffer: XLA:CPU compiles
+        # a many-operand concatenate as a chain of whole-buffer copies
+        # (O(leaves x M_total) traffic -- ~20x slower at a 200-leaf
+        # engine-scale tree), while consecutive dynamic_update_slice
+        # ops alias in place under jit
+        buf = jnp.zeros((n, width), dtype)
+        for f, (s0, _) in zip(flat, segments):
+            buf = jax.lax.dynamic_update_slice(buf, f, (0, s0))
     return buf, PackedMeta(treedef=treedef,
                            shapes=tuple(tuple(l.shape) for l in leaves),
                            segments=tuple(segments), width=width)
@@ -157,6 +165,37 @@ def pack_leaves(tree: Any) -> Tuple[jnp.ndarray, PackedMeta]:
 def unpack_leaves(buf: jnp.ndarray, meta: PackedMeta) -> Any:
     """Invert :func:`pack_leaves` (padding columns are dropped)."""
     leaves = [buf[:, s0:s1].reshape(shape)
+              for (s0, s1), shape in zip(meta.segments, meta.shapes)]
+    return jax.tree_util.tree_unflatten(meta.treedef, leaves)
+
+
+def pack_coord(tree: Any, meta: PackedMeta) -> jnp.ndarray:
+    """Pack a COORDINATOR pytree (the agent-axis-free ``y``, leaves
+    shaped like the agent leaves minus the leading axis) into a
+    ``(1, width)`` buffer aligned with ``meta``'s column segments --
+    the form the fused round-edge kernels stream ``y`` in."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != len(meta.shapes):
+        raise ValueError(f"coordinator tree has {len(leaves)} leaves, "
+                         f"meta has {len(meta.shapes)}")
+    flat = []
+    for leaf, shape in zip(leaves, meta.shapes):
+        if tuple(leaf.shape) != tuple(shape[1:]):
+            raise ValueError(f"coordinator leaf {tuple(leaf.shape)} does "
+                             f"not match agent leaf {tuple(shape)}")
+        flat.append(leaf.reshape(1, -1))
+    if len(flat) == 1 and meta.width == flat[0].shape[1]:
+        return flat[0]
+    buf = jnp.zeros((1, meta.width), flat[0].dtype)
+    for f, (s0, _) in zip(flat, meta.segments):
+        buf = jax.lax.dynamic_update_slice(buf, f, (0, s0))
+    return buf
+
+
+def unpack_coord(buf: jnp.ndarray, meta: PackedMeta) -> Any:
+    """Invert :func:`pack_coord`: a ``(1, width)`` coordinator buffer
+    back to the agent-axis-free pytree."""
+    leaves = [buf[:, s0:s1].reshape(shape[1:])
               for (s0, s1), shape in zip(meta.segments, meta.shapes)]
     return jax.tree_util.tree_unflatten(meta.treedef, leaves)
 

@@ -30,6 +30,24 @@ increment ``C(z_new - t)`` and the coordinator's copy ``t`` advances by
 exactly what was transmitted.  ``t`` therefore lags ``z`` by the
 never-transmitted residual, which *is* error feedback (an explicit error
 memory would double-count the residual and diverge).
+
+Round-edge backends: ``RoundConfig.engine_backend`` selects how the
+round's memory-bound coordinator edges execute -- ``"xla"`` (default)
+is the historical per-leaf ``tree_map`` path; ``"pallas"`` packs the
+agent stack into one ``(N, M_total)`` buffer and runs the two fused
+:mod:`repro.kernels.round_edge` kernels (mean + prox + reflection;
+z-update + participation selects), collapsing the coordinator edge to
+TWO launches.  Parity contract: the kernels are bit-identical to the
+per-leaf edge formulas as materialized values (asserted against the
+ref oracles across the whole prox table), and cross-backend
+trajectories agree to float32 rounding.  Exact bitwise equality of
+whole jitted rounds is NOT promised: XLA refolds the coordinator
+chain's constants per consumer/program/shape -- the xla backend's own
+``run()`` and ``step()`` already differ bitwise at some shapes -- so
+the kernels mirror the unfused path's typical compilation (chain
+duplication per consumer, pinned prox scales in ``core/prox.py``),
+which makes most full-round configurations agree bit-for-bit in
+practice.
 """
 
 from __future__ import annotations
@@ -44,6 +62,11 @@ from repro.fed import compress as compress_lib
 from repro.fed.compress import compress_increment, get_compressor
 
 tree_map = jax.tree_util.tree_map
+
+# round-edge execution backends: "xla" = per-leaf tree_map ops;
+# "pallas" = the fused repro.kernels.round_edge kernels on the packed
+# (N, M_total) buffer -- ONE launch per edge (parity contract above)
+ENGINE_BACKENDS = ("xla", "pallas")
 
 # (x_stack, v_stack, key) -> (w_stack, aux); aux may be None.  The solver
 # must be warm-started at x_stack (Section V-C1) -- the engine passes the
@@ -101,6 +124,12 @@ class RoundConfig:
     # per round, bit-identical output; non-accelerated compressors fall
     # back to the per-leaf path)
     compress_backend: str = "xla"
+    # "xla" = per-leaf tree_map round edges; "pallas" = the fused
+    # repro.kernels.round_edge kernels on the packed buffer (coordinator
+    # prox + reflect in one launch, z-update + participation selects in
+    # another; parity contract in the module docstring.  Non-elementwise
+    # custom proxes and mixed-dtype trees fall back per edge)
+    engine_backend: str = "xla"
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
@@ -108,9 +137,30 @@ class RoundConfig:
             raise ValueError(
                 f"unknown compress backend {self.compress_backend!r}; "
                 f"known: {', '.join(compress_lib.COMPRESS_BACKENDS)}")
+        if self.engine_backend not in ENGINE_BACKENDS:
+            raise ValueError(
+                f"unknown engine backend {self.engine_backend!r}; "
+                f"known: {', '.join(ENGINE_BACKENDS)}")
         p = self.participation
-        if isinstance(p, (list, tuple)) or hasattr(p, "__len__"):
-            p = tuple(float(x) for x in p)
+        if isinstance(p, (str, bytes)):
+            # a string is a __len__-bearing sequence of characters:
+            # without this guard participation="0.5" would silently
+            # tuple-ize into per-character draws (or crash later)
+            raise ValueError(
+                f"participation must be a probability or a per-agent "
+                f"sequence of probabilities, got the string {p!r}")
+        if getattr(p, "ndim", None) == 0:
+            # a 0-d numpy/jax scalar: ndarray types carry __len__ (it
+            # raises when called), so without this it would be
+            # misdiagnosed as a malformed per-agent sequence
+            object.__setattr__(self, "participation", float(p))
+        elif isinstance(p, (list, tuple)) or hasattr(p, "__len__"):
+            try:
+                p = tuple(float(x) for x in p)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"per-agent participation must contain numbers, "
+                    f"got {self.participation!r}") from None
             object.__setattr__(self, "participation", p)
             if len(p) != self.n_agents:
                 raise ValueError(
@@ -183,6 +233,98 @@ def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Round edges: the coordinator-side memory-bound passes, with a fused
+# packed-buffer backend
+# ---------------------------------------------------------------------------
+
+def fusible_prox(prox_h: ProxH) -> bool:
+    """Whether ``prox_h`` may be traced into the fused uplink kernel:
+    h = 0, or a :func:`repro.core.prox.make_prox` table entry (every one
+    is elementwise and carries the ``elementwise`` tag).  Untagged
+    custom callables take the XLA path."""
+    return prox_h is None or getattr(prox_h, "elementwise", False)
+
+
+def _uniform_stack(*trees) -> bool:
+    """True when every leaf of every tree shares one (agent count,
+    dtype) -- the precondition for packing them into one buffer (the
+    same rule :func:`repro.fed.compress.compress_increment` uses)."""
+    leaves = [l for t in trees for l in jax.tree_util.tree_leaves(t)]
+    return len({(l.shape[0], jnp.result_type(l)) for l in leaves}) == 1
+
+
+def coordinator_edge(cfg: RoundConfig, z: Any, z_seen: Any,
+                     prox_h: ProxH = None) -> Tuple[Any, Any]:
+    """The round's uplink edge: ``y = prox_{rho h/N}(mean_i z_seen_i)``
+    and the reflection ``v = 2 y - z`` (``z_seen`` is the coordinator's
+    lagged copy ``t`` under a compressed exchange, ``z`` itself
+    otherwise).
+
+    Under ``cfg.engine_backend == "pallas"`` (uniform stack, fusible
+    prox) the leaves are packed into one ``(N, M_total)`` buffer and the
+    agent-axis mean-reduce, the elementwise prox, and the reflected
+    broadcast run as ONE :mod:`repro.kernels.round_edge` launch --
+    ``zbar`` never materializes in HBM (parity contract: module
+    docstring)."""
+    if (cfg.engine_backend == "pallas" and fusible_prox(prox_h)
+            and _uniform_stack(z, z_seen)):
+        from repro.kernels.round_edge import ops as edge_ops
+
+        buf_z, meta = compress_lib.pack_leaves(z)
+        buf_t = (None if z_seen is z
+                 else compress_lib.pack_leaves(z_seen)[0])
+        y_buf, v_buf = edge_ops.round_uplink(
+            buf_z, buf_t, prox=prox_h, rho_eff=cfg.rho / cfg.n_agents)
+        return (compress_lib.unpack_coord(y_buf, meta),
+                compress_lib.unpack_leaves(v_buf, meta))
+    y = coordinator_prox(z_seen, cfg, prox_h)
+    return y, reflect(y, z)
+
+
+def agent_edge(cfg: RoundConfig, u: jnp.ndarray, w: Any, x: Any, z: Any,
+               y: Any, z_seen: Any = None,
+               prox_h: ProxH = None) -> Tuple[Any, Any]:
+    """The round's downlink edge: the Krasnosel'skii update
+    ``z + 2*damping*(w - y)`` and the participation selects of both
+    state variables (``x`` from the solver result ``w``, ``z`` from the
+    update), returning ``(x_new, z_new)``.
+
+    Under ``cfg.engine_backend == "pallas"`` (uniform stack, fusible
+    prox) both updates run as ONE fused :mod:`repro.kernels.round_edge`
+    launch on the packed buffer, the mask streamed as an ``(N,)``
+    vector -- ``jnp.where`` semantics preserved, so a diverged (NaN)
+    local solve still cannot leak into agents that sat the round out.
+    The kernel recomputes the coordinator chain from ``z_seen`` (the
+    same source :func:`coordinator_edge` read) instead of consuming
+    ``y``: the unfused path never materializes ``y`` between the prox
+    and the z-update, and parity wants the compiler handed the same
+    expression (see the kernel docstrings; contract in the module
+    docstring).
+    """
+    if z_seen is None:
+        z_seen = z
+    if (cfg.engine_backend == "pallas" and fusible_prox(prox_h)
+            and _uniform_stack(x, w, z, z_seen)):
+        from repro.kernels.round_edge import ops as edge_ops
+
+        x_buf, meta = compress_lib.pack_leaves(x)
+        w_buf = compress_lib.pack_leaves(w)[0]
+        z_buf = compress_lib.pack_leaves(z)[0]
+        t_buf = (None if z_seen is z
+                 else compress_lib.pack_leaves(z_seen)[0])
+        xb, zb = edge_ops.round_downlink(
+            x_buf, w_buf, z_buf, u, t_buf, prox=prox_h,
+            rho_eff=cfg.rho / cfg.n_agents, damping=cfg.damping)
+        return (compress_lib.unpack_leaves(xb, meta),
+                compress_lib.unpack_leaves(zb, meta))
+    x_new = masked_mix(u, w, x)
+    z_upd = tree_map(
+        lambda zl, wl, yl: zl + 2.0 * cfg.damping * (wl - yl[None]),
+        z, w, y)
+    return x_new, masked_mix(u, z_upd, z)
+
+
+# ---------------------------------------------------------------------------
 # Heterogeneous agent groups
 # ---------------------------------------------------------------------------
 
@@ -252,22 +394,18 @@ def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
     """
     key, k_part, k_solve = jax.random.split(key, 3)
 
-    # -- coordinator: averages the *transmitted* copies when the exchange
-    # is compressed (t_i), else the exact z_i (Lemma 6) ------------------
+    # -- coordinator edge: prox of the mean of the *transmitted* copies
+    # when the exchange is compressed (t_i), else the exact z_i (Lemma
+    # 6), fused with the reflection ------------------------------------
     z_seen = t if cfg.compressed else z
-    y = coordinator_prox(z_seen, cfg, prox_h)
+    y, v = coordinator_edge(cfg, z, z_seen, prox_h)
 
-    # -- agents: reflection + warm-started local training ----------------
-    v = reflect(y, z)
+    # -- agents: warm-started local training on the reflected states ----
     w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
 
-    # -- partial participation ------------------------------------------
+    # -- agent edge: Krasnosel'skii z-update + partial participation ----
     u = participation_mask(k_part, cfg)
-    x_new = masked_mix(u, w, x)
-    z_upd = tree_map(
-        lambda zl, wl, yl: zl + 2.0 * cfg.damping * (wl - yl[None]),
-        z, w, y)
-    z_new = masked_mix(u, z_upd, z)
+    x_new, z_new = agent_edge(cfg, u, w, x, z, y, z_seen, prox_h)
 
     # -- compressed uplink: t advances by the transmitted increment ------
     if cfg.compressed:

@@ -73,6 +73,7 @@ class FedConfig:
     compression: str = "none"        # z-uplink compressor registry name
     compress_ratio: float = 0.25
     compress_backend: str = "xla"    # "xla" per-leaf | "pallas" packed
+    engine_backend: str = "xla"      # round edges: "xla" | "pallas" fused
     damping: float = 1.0             # Krasnosel'skii relaxation
 
     def to_spec(self) -> FedSpec:
@@ -89,6 +90,7 @@ class FedConfig:
             compression=CompressionSpec(name=self.compression,
                                         ratio=self.compress_ratio,
                                         backend=self.compress_backend),
+            engine_backend=self.engine_backend,
             use_pallas=self.use_pallas_update)
 
 

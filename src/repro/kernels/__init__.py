@@ -11,6 +11,11 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
                      magnitude-rank select for topk/adaptive_topk, int8
                      quantize-dequantize) over the packed agent-axis
                      buffer of repro.fed.compress.pack_leaves.
+  round_edge      -- the Fed-PLT round's coordinator edges, fused over
+                     the same packed buffer: agent-axis mean + prox_h +
+                     reflection in one launch (uplink), Krasnosel'skii
+                     z-update + participation selects in another
+                     (downlink) -- repro.fed.engine's "pallas" backend.
   flash_attention -- blockwise online-softmax attention with GQA,
                      sliding window and logit softcap (model hot spot).
   lru_scan        -- chunked diagonal linear recurrence (RG-LRU / mamba

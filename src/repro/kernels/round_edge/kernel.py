@@ -1,0 +1,251 @@
+"""Fused Fed-PLT round-edge kernels: the coordinator edges of Algorithm 1.
+
+Every Fed-PLT round opens and closes with memory-bound elementwise
+traffic over the packed ``(N, M_total)`` agent buffer of
+:func:`repro.fed.compress.pack_leaves`:
+
+  uplink    -- ``y = prox_{rho h / N}(mean_i z_i)`` (Lemma 6) followed by
+               the reflection ``v = 2 y - z``.  Unfused, XLA round-trips
+               the full agent stack through HBM once for the mean, once
+               for the prox, and once per leaf for the broadcasted
+               reflection; fused, the agent-axis mean-reduce, the
+               elementwise prox, and the reflection happen in-register
+               per column tile -- ``zbar`` is never materialized in HBM
+               and both ``y`` and ``v`` come out of ONE launch.
+  downlink  -- the Krasnosel'skii update ``z + 2*damping*(w - y)`` and
+               the Bernoulli-participation selects of BOTH state
+               variables (``x`` from ``w``, ``z`` from the update), with
+               the ``(N,)`` mask streamed once and the coordinator
+               chain ``y`` recomputed in VMEM (not read back -- see
+               :func:`_downlink_body`).  NaN-safe ``where`` semantics
+               are preserved: a diverged local solve cannot leak into
+               agents that sat the round out.
+
+The whole :func:`repro.core.prox.make_prox` table (zero / l1 / l2sq /
+weight_decay / elastic_net / box / linf_ball) is elementwise, so the
+prox callable is traced straight into the kernel body (sign / abs /
+clip / mul lower on Mosaic); custom non-elementwise proxes fall back to
+the XLA path in the engine, never here.
+
+Both kernels tile COLUMNS only: each grid program sees the full agent
+axis (N is the small dimension), so the row mean is one in-kernel
+sublane reduction with no cross-program accumulation, and the mean /
+prox / reflect arithmetic is op-for-op the engine's per-leaf jnp chain
+-- bit-identical to the ref.py oracles (asserted in tests), interpret
+mode and TPU-shaped alike (no gather/scatter/iota anywhere; block row
+dim is the logical N, which Mosaic masks).  Cross-backend parity of
+whole jitted rounds is to fp32 rounding, not bitwise -- see the
+parity-contract note in :mod:`repro.fed.engine`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_COLS = 512   # lane-dim multiple of 128 (VREG alignment)
+
+
+def _apply_prox(zbar, prox_fn, rho_eff):
+    return zbar if prox_fn is None else prox_fn(zbar, rho_eff)
+
+
+def _uplink_kernel(z_ref, y_ref, v_ref, *, prox_fn, rho_eff):
+    """Exact exchange: the coordinator sees z itself -- one read.
+
+    The mean->prox chain is written out ONCE PER OUTPUT, not shared:
+    the unfused engine path hands XLA a ``y`` with two consumers (the
+    output and the reflection), which the simplifier duplicates and
+    then constant-folds / FMA-contracts differently per consumer (e.g.
+    ``2*(sum*c)`` becomes a single fused ``sum*(2c) - z``).  Mirroring
+    that duplication here puts the identical pattern in front of the
+    same compiler, so both backends usually round identically (the
+    contract is fp32-rounding equality -- see repro.fed.engine);
+    computing ``v`` from the stored ``y`` would pin an intermediate the
+    unfused path never materializes and systematically drift."""
+    z = z_ref[...]
+    y = _apply_prox(jnp.mean(z, axis=0, keepdims=True), prox_fn, rho_eff)
+    y_ref[...] = y.astype(y_ref.dtype)
+    y2 = _apply_prox(jnp.mean(z, axis=0, keepdims=True), prox_fn, rho_eff)
+    v_ref[...] = (2.0 * y2 - z).astype(v_ref.dtype)
+
+
+def _uplink_lagged_kernel(t_ref, z_ref, y_ref, v_ref, *, prox_fn,
+                          rho_eff):
+    """Compressed exchange: the coordinator averages its lagged copies
+    t_i while the reflection still uses the agents' exact z_i.  Same
+    per-output chain duplication as :func:`_uplink_kernel`."""
+    t = t_ref[...]
+    y = _apply_prox(jnp.mean(t, axis=0, keepdims=True), prox_fn, rho_eff)
+    y_ref[...] = y.astype(y_ref.dtype)
+    y2 = _apply_prox(jnp.mean(t, axis=0, keepdims=True), prox_fn, rho_eff)
+    v_ref[...] = (2.0 * y2 - z_ref[...]).astype(v_ref.dtype)
+
+
+def _downlink_body(x, w, z, z_seen, u, *, prox_fn, rho_eff, damping):
+    """x/z updates of one column block.  The coordinator chain
+    ``y = prox(mean(z_seen))`` is RECOMPUTED here rather than read from
+    the uplink kernel's output: the unfused engine path never
+    materializes ``y`` between the prox and the z-update, so XLA
+    constant-folds / FMA-contracts the whole ``z + 2d*(w - prox(mean))``
+    chain as one expression -- consuming a stored ``y`` would pin an
+    intermediate rounding the XLA path doesn't have and systematically
+    drift (see :func:`_uplink_kernel`).  The re-reduce is VMEM-local."""
+    mask = u != 0                   # (N, 1), broadcast across columns
+    x_new = jnp.where(mask, w, x)
+    y = _apply_prox(jnp.mean(z_seen, axis=0, keepdims=True), prox_fn,
+                    rho_eff)
+    z_upd = z + 2.0 * damping * (w - y)
+    return x_new, jnp.where(mask, z_upd, z)
+
+
+def _downlink_kernel(x_ref, w_ref, z_ref, u_ref, x_out_ref, z_out_ref,
+                     *, prox_fn, rho_eff, damping):
+    """Exact exchange: the coordinator chain reruns over z itself."""
+    z = z_ref[...]
+    x_new, z_new = _downlink_body(x_ref[...], w_ref[...], z, z,
+                                  u_ref[...], prox_fn=prox_fn,
+                                  rho_eff=rho_eff, damping=damping)
+    x_out_ref[...] = x_new.astype(x_out_ref.dtype)
+    z_out_ref[...] = z_new.astype(z_out_ref.dtype)
+
+
+def _downlink_lagged_kernel(x_ref, w_ref, z_ref, t_ref, u_ref,
+                            x_out_ref, z_out_ref, *, prox_fn, rho_eff,
+                            damping):
+    """Compressed exchange: the coordinator chain reruns over the
+    lagged copies t."""
+    x_new, z_new = _downlink_body(x_ref[...], w_ref[...], z_ref[...],
+                                  t_ref[...], u_ref[...],
+                                  prox_fn=prox_fn, rho_eff=rho_eff,
+                                  damping=damping)
+    x_out_ref[...] = x_new.astype(x_out_ref.dtype)
+    z_out_ref[...] = z_new.astype(z_out_ref.dtype)
+
+
+class _DirectRef:
+    """Minimal Ref shim for running a kernel body directly (grid == 1,
+    interpret mode): ``ref[...]`` reads the full-buffer block,
+    ``ref[...] = v`` records the output."""
+
+    def __init__(self, val=None, dtype=None):
+        self.val = val
+        self.dtype = dtype if dtype is not None else val.dtype
+
+    def __getitem__(self, idx):
+        return self.val
+
+    def __setitem__(self, idx, v):
+        self.val = v
+
+
+def _direct(kernel, ins, out_shapes):
+    """Run a kernel body once over full-buffer blocks.
+
+    The interpret emulator copies every input and output block through
+    ``dynamic_slice`` per program -- at engine-scale buffer widths
+    those whole-buffer copies cost ~50x the fused arithmetic itself.
+    With a single-program grid the body is just traced jnp on the full
+    block, so interpret mode executes it directly; ``pallas_call``
+    remains the path for real (multi-program) grids and for the TPU
+    lowering, and is asserted bit-identical to this realization in
+    tests (``emulate=True``)."""
+    in_refs = [_DirectRef(a) for a in ins]
+    out_refs = [_DirectRef(dtype=s.dtype) for s in out_shapes]
+    kernel(*in_refs, *out_refs)
+    return tuple(r.val for r in out_refs)
+
+
+def round_uplink_2d(z, t=None, *, prox_fn=None, rho_eff=1.0,
+                    block_cols=BLOCK_COLS, interpret=True,
+                    emulate=False):
+    """Fused coordinator prox + reflection on an ``(N, M)`` buffer.
+
+    Returns ``(y, v)`` with ``y`` of shape ``(1, M)``.  ``t`` is the
+    coordinator's lagged copy when the z-exchange is compressed (the
+    mean runs over ``t``, the reflection over ``z``); None means the
+    exchange is exact and ``z`` is read once.  ``M % block_cols == 0``
+    (ops.py pads).
+    """
+    n, m = z.shape
+    bc = min(block_cols, m)
+    if m % bc:
+        raise ValueError(f"column count {m} not a multiple of the "
+                         f"column block {bc} (ops.py pads)")
+    spec = pl.BlockSpec((n, bc), lambda j: (0, j))
+    y_spec = pl.BlockSpec((1, bc), lambda j: (0, j))
+    if t is None:
+        kernel = functools.partial(_uplink_kernel, prox_fn=prox_fn,
+                                   rho_eff=rho_eff)
+        in_specs, args = [spec], (z,)
+    else:
+        if t.shape != z.shape or t.dtype != z.dtype:
+            raise ValueError(f"t {t.shape}/{t.dtype} must match z "
+                             f"{z.shape}/{z.dtype}")
+        kernel = functools.partial(_uplink_lagged_kernel, prox_fn=prox_fn,
+                                   rho_eff=rho_eff)
+        in_specs, args = [spec, spec], (t, z)
+    out_shape = (jax.ShapeDtypeStruct((1, m), z.dtype),
+                 jax.ShapeDtypeStruct(z.shape, z.dtype))
+    if interpret and bc == m and not emulate:
+        return _direct(kernel, args, out_shape)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bc,),
+        in_specs=in_specs,
+        out_specs=(y_spec, spec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+
+
+def round_downlink_2d(x, w, z, t=None, *, u, prox_fn=None, rho_eff=1.0,
+                      damping=1.0, block_cols=BLOCK_COLS,
+                      interpret=True, emulate=False):
+    """Fused Krasnosel'skii z-update + participation selects.
+
+    ``x, w, z``: ``(N, M)``; ``u``: the ``(N, 1)`` participation draw
+    (any dtype; nonzero = the agent was active); ``t`` is the
+    coordinator's lagged copy of ``z`` under a compressed exchange
+    (None = exact, the coordinator chain reruns over ``z``).  Returns
+    ``(x_new, z_new)``.
+    """
+    n, m = x.shape
+    bc = min(block_cols, m)
+    if m % bc:
+        raise ValueError(f"column count {m} not a multiple of the "
+                         f"column block {bc} (ops.py pads)")
+    checks = [("w", w, x.shape), ("z", z, x.shape), ("u", u, (n, 1))]
+    if t is not None:
+        checks.append(("t", t, x.shape))
+    for name, a, shape in checks:
+        if a.shape != shape:
+            raise ValueError(f"{name} has shape {a.shape}, want {shape}")
+    spec = pl.BlockSpec((n, bc), lambda j: (0, j))
+    u_spec = pl.BlockSpec((n, 1), lambda j: (0, 0))
+    if t is None:
+        kernel = functools.partial(_downlink_kernel, prox_fn=prox_fn,
+                                   rho_eff=rho_eff, damping=damping)
+        in_specs = [spec, spec, spec, u_spec]
+        args = (x, w, z, u)
+    else:
+        kernel = functools.partial(_downlink_lagged_kernel,
+                                   prox_fn=prox_fn, rho_eff=rho_eff,
+                                   damping=damping)
+        in_specs = [spec, spec, spec, spec, u_spec]
+        args = (x, w, z, t, u)
+    out_shape = (jax.ShapeDtypeStruct(x.shape, x.dtype),
+                 jax.ShapeDtypeStruct(z.shape, z.dtype))
+    if interpret and bc == m and not emulate:
+        return _direct(kernel, args, out_shape)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bc,),
+        in_specs=in_specs,
+        out_specs=(spec, spec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)

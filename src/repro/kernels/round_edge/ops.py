@@ -1,0 +1,99 @@
+"""Public fused round-edge ops.
+
+Jitted wrappers over the :mod:`repro.kernels.round_edge.kernel` Pallas
+kernels: pad the column axis to the block, dispatch, slice back.  The
+prox callable is a STATIC argument (it is traced into the kernel body),
+so only the :func:`repro.core.prox.make_prox` table's elementwise
+functions belong here -- the engine gates on their ``elementwise`` tag
+and sends anything else down the XLA path.
+
+``interpret`` resolves via :data:`repro.kernels.ON_TPU` like the other
+kernel suites.  Padding columns are zeros; their outputs are sliced off
+before returning, so a prox whose fixed point is nonzero at 0 (e.g. a
+box with ``lo > 0``) cannot leak padding into real columns.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ON_TPU
+from repro.kernels.round_edge.kernel import (BLOCK_COLS, round_downlink_2d,
+                                             round_uplink_2d)
+
+
+def _resolve(x, interpret):
+    if x.ndim != 2:
+        raise ValueError(f"round-edge ops take (N, M) buffers, got "
+                         f"shape {x.shape}")
+    return (not ON_TPU) if interpret is None else interpret
+
+
+def _block_cols(m, block_cols, interpret):
+    """Interpret mode defaults to ONE program spanning the whole width:
+    the column block is a TPU VMEM-tiling concern, and the interpret
+    emulator's per-program loop overhead would otherwise dominate the
+    very traffic the fusion removes.  An explicit ``block_cols`` always
+    wins (the multi-block grid is exercised in tests)."""
+    if interpret and block_cols == BLOCK_COLS:
+        return max(block_cols, m)
+    return block_cols
+
+
+def _pad_cols(x, block_cols):
+    m = x.shape[1]
+    bc = min(block_cols, m)
+    pad = -m % bc
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((x.shape[0], pad), x.dtype)], axis=1)
+    return x, m
+
+
+@partial(jax.jit, static_argnames=("prox", "rho_eff", "interpret",
+                                   "block_cols", "emulate"))
+def round_uplink(z, t=None, *, prox=None, rho_eff=1.0, interpret=None,
+                 block_cols=BLOCK_COLS, emulate=False):
+    """Fused ``y = prox(mean_i z_i, rho_eff)``, ``v = 2 y - z``.
+
+    ``t`` (optional) is the coordinator's lagged copy of ``z`` under a
+    compressed exchange: the mean/prox run over ``t``, the reflection
+    over ``z``.  Returns ``(y, v)`` with ``y`` of shape ``(1, M)``.
+    """
+    interpret = _resolve(z, interpret)
+    block_cols = _block_cols(z.shape[1], block_cols, interpret)
+    zp, m = _pad_cols(z, block_cols)
+    tp = None if t is None else _pad_cols(t, block_cols)[0]
+    y, v = round_uplink_2d(zp, tp, prox_fn=prox, rho_eff=rho_eff,
+                           block_cols=block_cols, interpret=interpret,
+                           emulate=emulate)
+    return y[:, :m], v[:, :m]
+
+
+@partial(jax.jit, static_argnames=("prox", "rho_eff", "damping",
+                                   "interpret", "block_cols", "emulate"))
+def round_downlink(x, w, z, u, t=None, *, prox=None, rho_eff=1.0,
+                   damping=1.0, interpret=None, block_cols=BLOCK_COLS,
+                   emulate=False):
+    """Fused ``z + 2*damping*(w - prox(mean z_seen, rho_eff))`` +
+    participation selects of x and z.  ``u`` is the ``(N,)``
+    participation draw (nonzero = active); ``t`` the lagged coordinator
+    copy under a compressed exchange (None = exact; the coordinator
+    chain is recomputed in-kernel either way -- see the kernel
+    docstrings for why it is not an input).  Returns
+    ``(x_new, z_new)``.
+    """
+    interpret = _resolve(x, interpret)
+    block_cols = _block_cols(x.shape[1], block_cols, interpret)
+    xp, m = _pad_cols(x, block_cols)
+    wp, _ = _pad_cols(w, block_cols)
+    zp, _ = _pad_cols(z, block_cols)
+    tp = None if t is None else _pad_cols(t, block_cols)[0]
+    x_new, z_new = round_downlink_2d(
+        xp, wp, zp, tp, u=u.reshape(-1, 1), prox_fn=prox,
+        rho_eff=rho_eff, damping=damping, block_cols=block_cols,
+        interpret=interpret, emulate=emulate)
+    return x_new[:, :m], z_new[:, :m]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the fused round-edge kernels.
+
+Independent implementations of the coordinator edges, written exactly
+as :mod:`repro.fed.engine` computes them per leaf (mean -> prox ->
+reflect; Krasnosel'skii update -> NaN-safe participation selects) --
+the kernels must bit-match these on ragged, non-block-aligned, and
+partially-participating inputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def round_uplink_ref(z, t=None, prox=None, rho_eff=1.0):
+    """``y = prox(mean_i z_i, rho_eff)``, ``v = 2 y - z`` on (N, M).
+
+    Written with the ENGINE's exact shapes (axis-dropping mean, ``[None]``
+    reflection broadcast): XLA's constant refolding of the shared
+    coordinator chain is context-sensitive down to broadcast shapes, and
+    the engine's per-leaf formulation is the contract the kernels must
+    hit bit-for-bit."""
+    zbar = jnp.mean(z if t is None else t, axis=0)
+    y = zbar if prox is None else prox(zbar, rho_eff)
+    return y[None], 2.0 * y[None] - z
+
+
+def round_downlink_ref(x, w, z, u, t=None, prox=None, rho_eff=1.0,
+                       damping=1.0):
+    """Krasnosel'skii ``z + 2*damping*(w - y)`` + participation selects
+    (``jnp.where``: an inactive agent's state is untouched even by a
+    NaN local solve).  ``y`` is recomputed from the coordinator chain,
+    exactly as the engine's unfused z-update consumes it."""
+    mask = (u != 0).reshape(-1, 1)
+    zbar = jnp.mean(z if t is None else t, axis=0)
+    y = zbar if prox is None else prox(zbar, rho_eff)
+    x_new = jnp.where(mask, w, x)
+    z_new = jnp.where(mask, z + 2.0 * damping * (w - y[None]), z)
+    return x_new, z_new

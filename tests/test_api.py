@@ -131,13 +131,14 @@ def test_weight_decay_prox_shared_registry():
     """The model path's weight decay is the core/prox.py registry entry:
     one ProxH convention for both fronts."""
     y = jnp.array([2.0, -4.0])
+    # reciprocal-multiply form (not division): see prox_l2sq's docstring
     np.testing.assert_array_equal(
         make_prox("weight_decay", weight=0.3)(y, 0.5),
-        y / (1.0 + 0.3 * 0.5))
+        y * (1.0 / (1.0 + 0.3 * 0.5)))
     fcfg = runtime.FedConfig(n_agents=2, weight_decay=0.3, rho=1.0)
     np.testing.assert_array_equal(
         runtime._coordinator_prox({"w": y}, fcfg)["w"],
-        y / (1.0 + 0.3 * (1.0 / 2)))
+        y * (1.0 / (1.0 + 0.3 * (1.0 / 2))))
 
 
 # ---------------------------------------------------------------------------
