@@ -14,6 +14,20 @@ transformer through ``fed/runtime.py`` (i.e. through
                           quantity bought is uplink bytes, reported as
                           the compression ratio column)
   * pallas_edges       -- the fused round-edge backend end to end
+  * packed_xla/pallas  -- the packed-resident state layout (engine
+                          layout contract): (x, z, t) stay one
+                          (N, M_total) buffer across rounds, so the
+                          round pays ZERO pack/unpack traffic on the
+                          state path (asserted by the structure rows
+                          below and the CI smoke)
+
+Part 1b (round structure): state-path op counts of one round --
+concatenate / gather / dynamic_update_slice per (layout x backend) at
+engine scale with an elementwise oracle, so the counts measure the
+STATE path, not the model's forward/backward.  The committed baseline
+asserts the packed rounds contain zero concatenates and that the
+packed pallas round's update-slice count collapses to the oracle's
+single pack.
 
 Part 2 (round edges): the coordinator edge (prox + reflect; z-update +
 participation selects) at ENGINE SCALE -- N >= 32 agents on a ragged
@@ -74,18 +88,7 @@ def _best_ms(fn, args, iters, reps=3):
 
 
 def _count_prims(jaxpr, name):
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == name:
-            total += 1
-        for v in eqn.params.values():
-            for vv in (v if isinstance(v, (list, tuple)) else [v]):
-                inner = getattr(vv, "jaxpr", None)
-                if inner is not None:
-                    total += _count_prims(inner, name)
-                elif hasattr(vv, "eqns"):
-                    total += _count_prims(vv, name)
-    return total
+    return engine.count_primitives(jaxpr, [name])[name]
 
 
 def _bench_round(cfg, model, spec, iters):
@@ -113,11 +116,19 @@ def _rounds(quick):
     cases = [
         ("baseline", dict(), 1.0),
         ("pallas_fused", dict(use_pallas=True), 1.0),
-        ("topk50", dict(compression=CompressionSpec("topk", 0.5)), 2.0),
-        ("topk25", dict(compression=CompressionSpec("topk", 0.25)), 4.0),
-        ("int8", dict(compression=CompressionSpec("int8")), 4.0),
+        # compress backends pinned to "xla": the CompressionSpec default
+        # is now "auto", which would fold adaptive into adaptive_pallas
+        # and make int8 width-dependent -- these rows track the per-leaf
+        # path
+        ("topk50", dict(compression=CompressionSpec(
+            "topk", 0.5, backend="xla")), 2.0),
+        ("topk25", dict(compression=CompressionSpec(
+            "topk", 0.25, backend="xla")), 4.0),
+        ("int8", dict(compression=CompressionSpec(
+            "int8", backend="xla")), 4.0),
         ("adaptive", dict(compression=CompressionSpec(
-            "adaptive_topk", ratio=0.25, energy=0.9)), 4.0),
+            "adaptive_topk", ratio=0.25, energy=0.9,
+            backend="xla")), 4.0),
         # same compressor through the packed fused-kernel path: one
         # launch for the whole pytree, one sort instead of two per leaf
         ("adaptive_pallas", dict(compression=CompressionSpec(
@@ -131,6 +142,13 @@ def _rounds(quick):
         # the in-kernel prox)
         ("pallas_edges", dict(engine_backend="pallas",
                               weight_decay=0.01), 1.0),
+        # packed-resident state layout: same rounds with (x, z, t) kept
+        # as one (N, M_total) buffer -- packed_pallas is pallas_edges
+        # minus every per-edge pack/unpack copy
+        ("packed_xla", dict(state_layout="packed"), 1.0),
+        ("packed_pallas", dict(state_layout="packed",
+                               engine_backend="pallas",
+                               weight_decay=0.01), 1.0),
     ]
     rows, payload = [], []
     ms0 = None
@@ -144,6 +162,67 @@ def _rounds(quick):
         payload.append(dict(kind="round", case=name, ms_per_round=ms,
                             rel_to_baseline=ms / ms0,
                             uplink_ratio=uplink))
+    return rows, payload
+
+
+def _round_structure():
+    """State-path op counts of one full round per (layout x backend).
+
+    Uses the engine-scale ragged tree with an ELEMENTWISE gradient
+    oracle, so concatenate / gather / dynamic_update_slice counts
+    measure the state path only (a real model's forward/backward adds
+    its own value-path ops, identical across layouts).  The packed
+    rows' zero concatenate count is the layout contract's headline
+    property; the CI engine smoke asserts it from the committed JSON.
+    """
+    from repro.core.solvers import SolverConfig
+    from repro.fed import compress as compress_lib
+    from repro.fed.solvers import make_packed_local_solver
+
+    n = 8
+    tree = {f"l{i}": jnp.ones((n, w))
+            for i, w in enumerate(EDGE_WIDTHS[:16])}
+    meta = compress_lib.packed_meta(tree)
+    buf, _ = compress_lib.pack_leaves(tree)
+
+    def fgrad(w, k):
+        return jax.tree_util.tree_map(lambda l: 0.1 * l, w)
+
+    scfg = SolverConfig(name="gd", n_epochs=2, step_size=0.1)
+    rows, payload = [], []
+    for layout in ("tree", "packed"):
+        for backend in ("xla", "pallas"):
+            cfg = engine.RoundConfig(n_agents=n, rho=1.0, damping=0.5,
+                                     participation=0.9,
+                                     engine_backend=backend,
+                                     state_layout=layout)
+            if layout == "packed":
+                solver = make_packed_local_solver(
+                    scfg, fgrad, cfg.rho, 0.1, 1.0, meta=meta)
+                jaxpr = jax.make_jaxpr(
+                    lambda x, z, t, k: engine.packed_round_step(
+                        cfg, meta, x, z, t, k, solver))(
+                    buf, buf, buf, jax.random.PRNGKey(0)).jaxpr
+            else:
+                solver = engine.make_local_solver(scfg, fgrad, cfg.rho,
+                                                  0.1, 1.0)
+                jaxpr = jax.make_jaxpr(
+                    lambda x, z, t, k: engine.round_step(
+                        cfg, x, z, t, k, solver))(
+                    tree, tree, tree, jax.random.PRNGKey(0)).jaxpr
+            counts = engine.count_primitives(
+                jaxpr, ["concatenate", "gather", "dynamic_update_slice"])
+            rows.append(
+                f"engine,structure:{layout}_{backend},"
+                f"concat={counts['concatenate']},"
+                f"gather={counts['gather']},"
+                f"dus={counts['dynamic_update_slice']}")
+            payload.append(dict(
+                kind="round_structure", layout=layout, backend=backend,
+                concatenate=counts["concatenate"],
+                gather=counts["gather"],
+                dynamic_update_slice=counts["dynamic_update_slice"],
+                n_agents=n, n_leaves=len(tree)))
     return rows, payload
 
 
@@ -219,6 +298,37 @@ def _round_edge(quick):
             n_agents=EDGE_N_AGENTS, m_total=m_total,
             n_leaves=len(EDGE_WIDTHS)))
 
+    # -- packed-resident edges: the same fused kernels with the state
+    # ALREADY resident in one (N, width) buffer (the packed layout's
+    # round-to-round steady state) -- what the tree-layout pallas row
+    # pays on top of this is pure pack/unpack traffic
+    from repro.fed import compress as compress_lib
+
+    meta = compress_lib.packed_meta(z)
+    xb = compress_lib.pack_leaves(x)[0]
+    wb = compress_lib.pack_leaves(w)[0]
+    zb = compress_lib.pack_leaves(z)[0]
+    pcfg = engine.RoundConfig(n_agents=EDGE_N_AGENTS, rho=1.0,
+                              damping=0.5, engine_backend="pallas",
+                              state_layout="packed")
+
+    def packed_edges(x_, w_, z_, u_):
+        y, v = engine.coordinator_edge_packed(pcfg, z_, z_, meta, prox)
+        xn, zn = engine.agent_edge_packed(pcfg, u_, w_, x_, z_, y, z_,
+                                          prox)
+        return v, xn, zn
+
+    ms_packed_res = _best_ms(jax.jit(packed_edges), (xb, wb, zb, u),
+                             iters)
+    rows.append(f"engine,edge:packed_pallas,{ms_packed_res:.2f},"
+                f"launches={fused_launches},{shape_s}")
+    payload.append(dict(
+        kind="edge", backend="packed_pallas",
+        ms_per_edge_pair=ms_packed_res,
+        pallas_launches=fused_launches, jaxpr_ops=None,
+        n_agents=EDGE_N_AGENTS, m_total=m_total,
+        n_leaves=len(EDGE_WIDTHS)))
+
     # -- launch-granular: the unfused schedule (one jitted executable
     # per op = one launch + HBM round-trip each) vs the two fused
     # kernels.  Two unfused brackets: per-leaf per-op launches (the xla
@@ -273,10 +383,11 @@ def _round_edge(quick):
 
 def run(quick=True):
     round_rows, round_payload = _rounds(quick)
+    struct_rows, struct_payload = _round_structure()
     edge_rows, edge_payload = _round_edge(quick)
-    payload = {"cases": round_payload + edge_payload,
+    payload = {"cases": round_payload + struct_payload + edge_payload,
                "quick": bool(quick)}
-    return round_rows + edge_rows, payload
+    return round_rows + struct_rows + edge_rows, payload
 
 
 if __name__ == "__main__":

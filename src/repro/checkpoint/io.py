@@ -24,14 +24,21 @@ def _flatten(tree):
     return out
 
 
-def save_checkpoint(path: str, tree, step: int | None = None):
+def save_checkpoint(path: str, tree, step: int | None = None,
+                    extra: dict | None = None):
+    """``extra`` is an optional JSON-able dict stored in the manifest --
+    e.g. the packed state layout (``packed_layout_manifest``) so a
+    packed-resident run can validate its buffer geometry on restore."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(tree)
     np.savez(os.path.join(path, "leaves.npz"), **flat)
     treedef = jax.tree_util.tree_structure(tree)
+    manifest = {"keys": sorted(flat), "step": step,
+                "treedef": str(treedef)}
+    if extra is not None:
+        manifest["extra"] = extra
     with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump({"keys": sorted(flat), "step": step,
-                   "treedef": str(treedef)}, f)
+        json.dump(manifest, f)
 
 
 def restore_checkpoint(path: str, like, shardings=None):
@@ -57,3 +64,20 @@ def restore_checkpoint(path: str, like, shardings=None):
 def checkpoint_step(path: str) -> int | None:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f).get("step")
+
+
+def checkpoint_extra(path: str) -> dict | None:
+    """The manifest's ``extra`` dict (None for checkpoints written
+    without one)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra")
+
+
+def packed_layout_manifest(meta) -> dict:
+    """JSON form of a :class:`repro.fed.compress.PackedMeta` for the
+    checkpoint manifest: enough to verify on restore that a packed
+    ``(N, width)`` state buffer was produced by the same model layout
+    (the treedef itself is rebuilt from the model, not the manifest)."""
+    return {"state_layout": "packed", "width": int(meta.width),
+            "segments": [[int(a), int(b)] for a, b in meta.segments],
+            "shapes": [list(map(int, s)) for s in meta.shapes]}

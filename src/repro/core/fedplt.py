@@ -55,8 +55,13 @@ class FedPLTConfig:
     compression: str = "none"         # compressor registry name
     compress_ratio: float = 0.25      # top-k fraction kept
     compress_energy: float = 0.95     # adaptive_topk per-agent target
-    compress_backend: str = "xla"     # "xla" per-leaf | "pallas" packed
+    compress_backend: str = "xla"     # "auto" | "xla" per-leaf | "pallas"
     engine_backend: str = "xla"       # round edges: "xla" | "pallas" fused
+    # round-to-round state representation: "tree" | "packed" resident
+    # buffer (engine layout contract; dense states are single-leaf, so
+    # the packed form of an (N, n) stack is the same array -- the knob
+    # switches the round arithmetic to the whole-buffer packed path)
+    state_layout: str = "tree"
     # Krasnosel'skii relaxation: z <- z + 2*damping*(x - y).  damping = 1
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges (see tests)
@@ -85,7 +90,8 @@ class FedPLTConfig:
                 name=self.compression, ratio=self.compress_ratio,
                 energy=self.compress_energy,
                 backend=self.compress_backend),
-            engine_backend=self.engine_backend)
+            engine_backend=self.engine_backend,
+            state_layout=self.state_layout)
 
 
 class FedPLT:
@@ -132,7 +138,17 @@ class FedPLT:
             compress_ratio=config.compress_ratio,
             compress_energy=config.compress_energy,
             compress_backend=config.compress_backend,
-            engine_backend=config.engine_backend)
+            engine_backend=config.engine_backend,
+            state_layout=config.state_layout)
+        # packed layout: the dense state is single-leaf, so its resident
+        # (N, n) buffer IS the stacked array (pack_leaves fast path, no
+        # lane padding) -- the meta is pure shape arithmetic and the
+        # historical solvers consume the buffer unchanged
+        self._meta = None
+        if config.state_layout == "packed":
+            from repro.fed import compress as compress_lib
+            self._meta = compress_lib.packed_meta(jax.ShapeDtypeStruct(
+                (problem.n_agents, problem.dim), jnp.float32))
         if solver_groups is None:
             # the homogeneous path is the single full-size group; a
             # [0:N] slice is a no-op, so this is bit-identical to the
@@ -233,10 +249,17 @@ class FedPLT:
     def _round_impl(self, state: FedPLTState) -> FedPLTState:
         compressed = self._ecfg.compressed
         t = state.t if compressed else state.z
-        res = engine.round_step(self._ecfg, state.x, state.z, t,
-                                state.key, self._solvers,
-                                prox_h=self.prox_h)
-        return FedPLTState(x=res.x, z=res.z, y=res.y, key=res.next_key,
+        if self._meta is not None:
+            res = engine.packed_round_step(
+                self._ecfg, self._meta, state.x, state.z, t, state.key,
+                self._solvers, prox_h=self.prox_h)
+            y = res.y.reshape(-1)   # (1, n) coordinator buffer -> (n,)
+        else:
+            res = engine.round_step(self._ecfg, state.x, state.z, t,
+                                    state.key, self._solvers,
+                                    prox_h=self.prox_h)
+            y = res.y
+        return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
                            k=state.k + 1,
                            t=res.t if compressed else None)
 

@@ -109,10 +109,14 @@ class CompressionSpec:
         help="adaptive_topk per-agent energy target"))
     # "pallas": pack all leaves into one (N, M_total) buffer and run the
     # fused repro.kernels.compress kernels once per round (bit-identical
-    # to the per-leaf "xla" path; compressors without a kernel fall back)
-    backend: str = dataclasses.field(default="xla", metadata=_cli(
-        flag="--compress-backend", choices=["xla", "pallas"],
-        help="uplink compressor backend (pallas = fused packed kernels)"))
+    # to the per-leaf "xla" path; compressors without a kernel fall
+    # back).  "auto" (default) picks per case from the committed
+    # benchmark heuristics (repro.fed.compress.resolve_backend) -- a
+    # pure scheduling choice, since both backends are bit-identical.
+    backend: str = dataclasses.field(default="auto", metadata=_cli(
+        flag="--compress-backend", choices=["auto", "xla", "pallas"],
+        help="uplink compressor backend (auto picks per case; pallas = "
+             "fused packed kernels)"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -245,6 +249,15 @@ class FedSpec:
     engine_backend: str = dataclasses.field(default="xla", metadata=_cli(
         flag="--engine-backend", choices=["xla", "pallas"],
         help="round-edge backend (pallas = fused packed kernels)"))
+    # "packed": carry the federated state (x, z, t) as one resident
+    # (N, M_total) buffer per variable across rounds -- packed once at
+    # init, unpacked only at the API boundary (consensus / metrics /
+    # checkpoints).  Bitwise-identical trajectories to "tree" per
+    # realization (layout contract in repro.fed.engine).
+    state_layout: str = dataclasses.field(default="tree", metadata=_cli(
+        flag="--state-layout", choices=["tree", "packed"],
+        help="round-to-round state representation (packed = one "
+             "resident agent-axis buffer, zero per-round pack/unpack)"))
 
     def __post_init__(self):
         groups = self.agent_groups
@@ -317,7 +330,8 @@ class FedSpec:
             compress_ratio=self.compression.ratio,
             compress_energy=self.compression.energy,
             compress_backend=self.compression.backend,
-            engine_backend=self.engine_backend)
+            engine_backend=self.engine_backend,
+            state_layout=self.state_layout)
 
     def moduli_for(self, gamma: Optional[float]) \
             -> tuple[float, Optional[float]]:
@@ -390,6 +404,10 @@ class FedSpec:
             raise ValueError(
                 f"unknown engine backend {self.engine_backend!r}; "
                 f"known: {', '.join(engine.ENGINE_BACKENDS)}")
+        if self.state_layout not in engine.ENGINE_LAYOUTS:
+            raise ValueError(
+                f"unknown state layout {self.state_layout!r}; "
+                f"known: {', '.join(engine.ENGINE_LAYOUTS)}")
         if self.weight_decay < 0.0:
             raise ValueError("weight_decay must be >= 0")
         if self.weight_decay != 0.0 and self.prox_h not in (
@@ -468,6 +486,7 @@ class FedSpec:
             compress_energy=self.compression.energy,
             compress_backend=self.compression.backend,
             engine_backend=self.engine_backend,
+            state_layout=self.state_layout,
             damping=self.damping)
 
 
@@ -692,6 +711,11 @@ class ModelTrainer(FedTrainer):
         self.spec = spec.validate()
         self.model = model
         self._runtime = runtime
+        # packed layout: the one static buffer meta of the run, needed
+        # for the API-boundary unpack (consensus / checkpoint targets)
+        self.packed_meta = (runtime.packed_layout(model, self.spec)
+                            if self.spec.state_layout == "packed"
+                            else None)
         self._step = jax.jit(
             runtime.make_train_step(model, spec, use_remat=use_remat))
 
@@ -719,7 +743,7 @@ class ModelTrainer(FedTrainer):
         return state, history
 
     def consensus(self, state):
-        return self._runtime.consensus_model(state)
+        return self._runtime.consensus_model(state, meta=self.packed_meta)
 
     def privacy_report(self, n_rounds: int,
                        local_dataset_size=None,

@@ -32,6 +32,16 @@ with segment-aware per-(agent, leaf) scales -- bit-identical to the
 per-leaf XLA path (asserted in tests).  Compressors without a kernel
 (custom registry entries, ``none``) fall back to the per-leaf XLA path
 under either backend.
+
+``"auto"`` (the :class:`repro.fed.api.CompressionSpec` default) picks
+per call from the committed BENCH_compress.json evidence
+(:func:`resolve_backend`): the fused kernel always wins for
+``adaptive_topk`` (it replaces two XLA sorts per leaf with one counting
+pass), always loses for static ``topk`` on this container (XLA's
+``top_k`` beats the full sort), and pays off for ``int8`` only on wide
+buffers where the scale reduction amortizes the launch.  Both backends
+are bit-identical, so auto-dispatch is a pure scheduling choice --
+trajectories do not depend on it.
 """
 
 from __future__ import annotations
@@ -46,12 +56,16 @@ CompressFn = Callable[[jnp.ndarray, Any], jnp.ndarray]
 
 _REGISTRY: Dict[str, CompressFn] = {}
 
-COMPRESS_BACKENDS = ("xla", "pallas")
+COMPRESS_BACKENDS = ("auto", "xla", "pallas")
 # registry names with a fused kernel implementation
 PALLAS_COMPRESSORS = frozenset({"topk", "adaptive_topk", "int8"})
 
 # column alignment of the packed buffer (TPU lane width)
 _LANE = 128
+
+# auto-dispatch: int8's fused kernel only amortizes its launch on wide
+# buffers (BENCH_compress.json: 0.29x at m=256, 1.1-1.3x at m >= 65536)
+_AUTO_INT8_MIN_COLS = 16384
 
 
 def register_compressor(name: str) -> Callable[[CompressFn], CompressFn]:
@@ -85,8 +99,35 @@ def _backend_of(cfg) -> str:
     return backend
 
 
-def _use_pallas(cfg) -> bool:
-    return (_backend_of(cfg) == "pallas"
+def resolve_backend(cfg, m_total=None) -> str:
+    """Resolve ``cfg.compress_backend`` to a concrete ``"xla"`` /
+    ``"pallas"`` for this ``(n_agents, m_total, compressor)`` case.
+
+    Explicit backends pass through.  ``"auto"`` encodes the committed
+    BENCH_compress.json evidence: ``adaptive_topk`` always takes the
+    fused kernel (4-9x: one counting pass vs two XLA sorts per leaf),
+    static ``topk`` always takes XLA (``lax.top_k`` beats a full sort at
+    every measured shape), and ``int8`` takes the kernel only at
+    ``m_total >= _AUTO_INT8_MIN_COLS`` where the per-(agent, segment)
+    scale reduction amortizes the launch.  Both backends are
+    bit-identical, so this is purely a scheduling decision.
+    """
+    backend = _backend_of(cfg)
+    if backend != "auto":
+        return backend
+    name = cfg.compression
+    if name not in PALLAS_COMPRESSORS:
+        return "xla"          # no kernel: only the registry path exists
+    if name == "adaptive_topk":
+        return "pallas"
+    if name == "int8" and m_total is not None \
+            and m_total >= _AUTO_INT8_MIN_COLS:
+        return "pallas"
+    return "xla"
+
+
+def _use_pallas(cfg, m_total=None) -> bool:
+    return (resolve_backend(cfg, m_total) == "pallas"
             and cfg.compression in PALLAS_COMPRESSORS)
 
 
@@ -105,7 +146,7 @@ def _pallas_rows(dz: jnp.ndarray, cfg, segments=None) -> jnp.ndarray:
 
 def compress_rows(dz: jnp.ndarray, cfg) -> jnp.ndarray:
     """Dispatch the configured compressor on a flattened (N, m) increment."""
-    if _use_pallas(cfg):
+    if _use_pallas(cfg, dz.shape[1]):
         return _pallas_rows(dz, cfg)
     return get_compressor(cfg.compression)(dz, cfg)
 
@@ -117,54 +158,89 @@ def compress_rows(dz: jnp.ndarray, cfg) -> jnp.ndarray:
 class PackedMeta(NamedTuple):
     """Static layout of a packed agent-stacked pytree: everything needed
     to invert :func:`pack_leaves` and to hand the kernels their static
-    per-leaf column segments."""
+    per-leaf column segments.  Hashable (tuples + a treedef), so it can
+    ride through ``jit`` closures and static arguments unchanged -- the
+    packed-resident engine keeps ONE meta for the whole run."""
 
     treedef: Any
     shapes: Tuple[Tuple[int, ...], ...]      # per-leaf (N, ...) shapes
     segments: Tuple[Tuple[int, int], ...]    # per-leaf (start, stop) cols
     width: int                               # padded column count
 
+    @property
+    def m_total(self) -> int:
+        """Data columns (excluding lane padding) -- the auto-dispatch
+        shape signal."""
+        return self.segments[-1][1]
+
+
+def packed_meta(tree: Any) -> PackedMeta:
+    """The :class:`PackedMeta` that :func:`pack_leaves` would record for
+    ``tree`` -- pure shape arithmetic, so ``tree`` may hold
+    ``ShapeDtypeStruct`` leaves (e.g. from ``jax.eval_shape``): the
+    packed-resident front ends derive their static layout without ever
+    materializing a tree-form state."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("packed_meta: empty pytree")
+    n = leaves[0].shape[0]
+    dtype = jnp.result_type(leaves[0])
+    for l in leaves:
+        if l.shape[0] != n or jnp.result_type(l) != dtype:
+            raise ValueError(
+                "pack_leaves needs a uniform agent axis and dtype, got "
+                f"{[(tuple(x.shape), str(jnp.result_type(x))) for x in leaves]}")
+    segments, start = [], 0
+    for l in leaves:
+        m = 1
+        for d in l.shape[1:]:
+            m *= d
+        segments.append((start, start + m))
+        start += m
+    # single leaf: the flattened leaf IS the buffer, no lane padding --
+    # the kernel wrappers pad to their block internally, and skipping
+    # the pad keeps the dense (N, n) front end's packed form identical
+    # to its tree form (zero-copy residency)
+    width = start if len(leaves) == 1 else -(-start // _LANE) * _LANE
+    return PackedMeta(treedef=treedef,
+                      shapes=tuple(tuple(l.shape) for l in leaves),
+                      segments=tuple(segments), width=width)
+
 
 def pack_leaves(tree: Any) -> Tuple[jnp.ndarray, PackedMeta]:
     """Flatten every ``(N, ...)`` leaf and concatenate along columns into
     one ``(N, M_total)`` buffer (padded to the TPU lane width), recording
     per-leaf segment offsets.  All leaves must share the agent axis and
-    dtype (the uplink buffer is one wire format)."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    if not leaves:
-        raise ValueError("pack_leaves: empty pytree")
+    dtype (the uplink buffer is one wire format).
+
+    Fast path: a single-leaf tree (the dense front end) skips the copy
+    chain entirely -- the flattened leaf is returned as the buffer, a
+    pure reshape (and the identity for an already-2D array)."""
+    meta = packed_meta(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
     n = leaves[0].shape[0]
-    dtype = leaves[0].dtype
-    for l in leaves:
-        if l.shape[0] != n or l.dtype != dtype:
-            raise ValueError(
-                "pack_leaves needs a uniform agent axis and dtype, got "
-                f"{[(tuple(x.shape), str(x.dtype)) for x in leaves]}")
     flat = [l.reshape(n, -1) for l in leaves]
-    segments, start = [], 0
-    for f in flat:
-        segments.append((start, start + f.shape[1]))
-        start += f.shape[1]
-    width = -(-start // _LANE) * _LANE
-    if len(flat) == 1 and width == start:
-        buf = flat[0]
-    else:
-        # write each leaf into a preallocated buffer: XLA:CPU compiles
-        # a many-operand concatenate as a chain of whole-buffer copies
-        # (O(leaves x M_total) traffic -- ~20x slower at a 200-leaf
-        # engine-scale tree), while consecutive dynamic_update_slice
-        # ops alias in place under jit
-        buf = jnp.zeros((n, width), dtype)
-        for f, (s0, _) in zip(flat, segments):
-            buf = jax.lax.dynamic_update_slice(buf, f, (0, s0))
-    return buf, PackedMeta(treedef=treedef,
-                           shapes=tuple(tuple(l.shape) for l in leaves),
-                           segments=tuple(segments), width=width)
+    if len(flat) == 1:
+        return flat[0], meta
+    # write each leaf into a preallocated buffer: XLA:CPU compiles
+    # a many-operand concatenate as a chain of whole-buffer copies
+    # (O(leaves x M_total) traffic -- ~20x slower at a 200-leaf
+    # engine-scale tree), while consecutive dynamic_update_slice
+    # ops alias in place under jit
+    buf = jnp.zeros((n, meta.width), leaves[0].dtype)
+    for f, (s0, _) in zip(flat, meta.segments):
+        buf = jax.lax.dynamic_update_slice(buf, f, (0, s0))
+    return buf, meta
 
 
 def unpack_leaves(buf: jnp.ndarray, meta: PackedMeta) -> Any:
-    """Invert :func:`pack_leaves` (padding columns are dropped)."""
-    leaves = [buf[:, s0:s1].reshape(shape)
+    """Invert :func:`pack_leaves` (padding columns are dropped).
+
+    The agent count is taken from ``buf``, not ``meta``, so a row-sliced
+    buffer (a heterogeneous solver group's agents) unpacks with the same
+    meta."""
+    n = buf.shape[0]
+    leaves = [buf[:, s0:s1].reshape((n,) + shape[1:])
               for (s0, s1), shape in zip(meta.segments, meta.shapes)]
     return jax.tree_util.tree_unflatten(meta.treedef, leaves)
 
@@ -200,6 +276,16 @@ def unpack_coord(buf: jnp.ndarray, meta: PackedMeta) -> Any:
     return jax.tree_util.tree_unflatten(meta.treedef, leaves)
 
 
+def _tree_m_total(leaves) -> int:
+    total = 0
+    for l in leaves:
+        m = 1
+        for d in l.shape[1:]:
+            m *= d
+        total += m
+    return total
+
+
 def compress_increment(dz: Any, cfg) -> Any:
     """Apply the configured compressor to a stacked increment pytree
     (top-k / int8 scales are per agent per leaf, which is what an actual
@@ -209,8 +295,8 @@ def compress_increment(dz: Any, cfg) -> Any:
     launch per leaf.  Pallas backend (accelerated compressors only):
     leaves are packed into one (N, M_total) buffer and the fused
     segment-aware kernel runs ONCE per round; bit-identical output."""
-    if _use_pallas(cfg):
-        leaves = jax.tree_util.tree_leaves(dz)
+    leaves = jax.tree_util.tree_leaves(dz)
+    if _use_pallas(cfg, _tree_m_total(leaves)):
         uniform = len({(l.shape[0], jnp.result_type(l)) for l in leaves}) == 1
         if uniform:
             buf, meta = pack_leaves(dz)
@@ -226,6 +312,33 @@ def compress_increment(dz: Any, cfg) -> Any:
         return fn(l.reshape(l.shape[0], -1), cfg).reshape(l.shape)
 
     return jax.tree_util.tree_map(leaf, dz)
+
+
+def compress_increment_packed(dz_buf: jnp.ndarray, meta: PackedMeta,
+                              cfg) -> jnp.ndarray:
+    """The configured compressor on a RESIDENT packed ``(N, width)``
+    increment -- the packed-resident engine's uplink: no pack/unpack at
+    all.
+
+    Pallas-resolved backends run the fused segment-aware kernel directly
+    on the buffer.  The XLA path runs the registry function per column
+    segment (each segment is exactly one flattened leaf, so scales stay
+    per (agent, leaf) and the output is bit-identical to the tree path)
+    and writes the results into a zero buffer -- out-of-segment padding
+    columns therefore come back zero under BOTH backends (the kernels
+    zero them too), which keeps the coordinator copy ``t``'s padding
+    static across rounds."""
+    if _use_pallas(cfg, meta.m_total):
+        return _pallas_rows(dz_buf, cfg, meta.segments)
+    fn = get_compressor(cfg.compression)
+    if len(meta.segments) == 1 and meta.width == meta.m_total:
+        return fn(dz_buf, cfg)     # single leaf: the buffer IS the leaf
+    out = jnp.zeros_like(dz_buf)
+    for s0, s1 in meta.segments:
+        out = jax.lax.dynamic_update_slice(
+            out, fn(jax.lax.slice_in_dim(dz_buf, s0, s1, axis=1), cfg),
+            (0, s0))
+    return out
 
 
 # ---------------------------------------------------------------------------

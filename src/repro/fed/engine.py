@@ -48,12 +48,54 @@ the kernels mirror the unfused path's typical compilation (chain
 duplication per consumer, pinned prox scales in ``core/prox.py``),
 which makes most full-round configurations agree bit-for-bit in
 practice.
+
+State layouts -- the LAYOUT CONTRACT (ROADMAP item 1):
+``RoundConfig.state_layout`` selects the round-to-round representation
+of the federated state ``(x, z, t)``:
+
+* ``"tree"`` (default): agent-stacked pytrees, the historical layout.
+  Every packed-backend feature (fused edges, packed compress) pays a
+  ``pack_leaves``/``unpack_leaves`` round-trip per use.
+* ``"packed"``: ONE resident ``(N, M_total)`` buffer per state
+  variable plus one static :class:`repro.fed.compress.PackedMeta`,
+  packed once at ``init``.  Every round-to-round transition -- both
+  fused round-edge kernels, the compressed z-exchange, participation
+  selects, the Krasnosel'skii update, and (for gd/agd/sgd) the local
+  solver itself -- runs directly on the buffer
+  (:func:`packed_round_step`); the tree form is reconstructed only at
+  the API boundary (consensus, metrics, checkpointing) and inside the
+  gradient oracle (``unpack -> fgrad -> pack``, traced into the same
+  jit).  A packed pallas round therefore contains ZERO concatenate /
+  gather ops on the state path (asserted in tests via
+  :func:`count_primitives`); the remaining layout traffic is the
+  oracle's static slice/update-slice chain, which touches gradient
+  values, not state.
+
+  Parity: packed-resident trajectories are BITWISE identical to the
+  tree-resident path per realization, under both engine backends and
+  every registry compressor (asserted in tests).  The packed edges
+  compute the same per-column arithmetic the per-leaf path computes
+  (columns are independent; the agent-axis mean reduces in the same
+  order), the PRNG key schedule is unchanged, and the two
+  solver-stream exceptions fall back to unpack-around-the-solver
+  rather than forking bits: ``noisy_gd`` (its per-leaf noise draws
+  fold the key per leaf -- a single buffer would change the DP noise
+  stream) and clipped runs (the clip norm reduces per leaf before
+  summing -- one buffer would reorder the reduction).
+
+  Padding columns (multi-leaf trees are lane-aligned) are dead state:
+  they start at zero, may drift under an elementwise prox whose fixed
+  point at 0 is nonzero, and are never unpacked; the compress paths
+  zero out-of-segment columns under both backends, so the coordinator
+  copy ``t``'s padding never advances.  ``jnp.where`` masking keeps
+  them NaN-safe.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +109,11 @@ tree_map = jax.tree_util.tree_map
 # "pallas" = the fused repro.kernels.round_edge kernels on the packed
 # (N, M_total) buffer -- ONE launch per edge (parity contract above)
 ENGINE_BACKENDS = ("xla", "pallas")
+
+# round-to-round state representations (layout contract above):
+# "tree" = agent-stacked pytrees; "packed" = one resident (N, M_total)
+# buffer per state variable + a static PackedMeta
+ENGINE_LAYOUTS = ("tree", "packed")
 
 # (x_stack, v_stack, key) -> (w_stack, aux); aux may be None.  The solver
 # must be warm-started at x_stack (Section V-C1) -- the engine passes the
@@ -130,6 +177,11 @@ class RoundConfig:
     # another; parity contract in the module docstring.  Non-elementwise
     # custom proxes and mixed-dtype trees fall back per edge)
     engine_backend: str = "xla"
+    # "tree" = agent-stacked pytrees round to round; "packed" = one
+    # resident (N, M_total) buffer per state variable (layout contract
+    # in the module docstring; front ends dispatch on this to
+    # packed_round_step and convert at the API boundary only)
+    state_layout: str = "tree"
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
@@ -141,6 +193,10 @@ class RoundConfig:
             raise ValueError(
                 f"unknown engine backend {self.engine_backend!r}; "
                 f"known: {', '.join(ENGINE_BACKENDS)}")
+        if self.state_layout not in ENGINE_LAYOUTS:
+            raise ValueError(
+                f"unknown state layout {self.state_layout!r}; "
+                f"known: {', '.join(ENGINE_LAYOUTS)}")
         p = self.participation
         if isinstance(p, (str, bytes)):
             # a string is a __len__-bearing sequence of characters:
@@ -322,6 +378,127 @@ def agent_edge(cfg: RoundConfig, u: jnp.ndarray, w: Any, x: Any, z: Any,
         lambda zl, wl, yl: zl + 2.0 * cfg.damping * (wl - yl[None]),
         z, w, y)
     return x_new, masked_mix(u, z_upd, z)
+
+
+# ---------------------------------------------------------------------------
+# Packed-resident round edges: the same arithmetic on the resident
+# (N, M_total) buffer -- no pack/unpack anywhere (layout contract in the
+# module docstring)
+# ---------------------------------------------------------------------------
+
+def coordinator_edge_packed(cfg: RoundConfig, z: jnp.ndarray,
+                            z_seen: jnp.ndarray, meta,
+                            prox_h: ProxH = None) \
+        -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`coordinator_edge` on resident ``(N, width)`` buffers:
+    returns ``(y, v)`` with ``y`` the ``(1, width)`` coordinator buffer.
+
+    The pallas backend hands the buffers straight to the fused kernel
+    (the tree path's pack step vanishes); the xla backend computes the
+    identical per-column arithmetic with whole-buffer ops.  A
+    non-elementwise custom prox is the one case that must see the tree:
+    it is applied through ``unpack_coord``/``pack_coord`` on the
+    ``(1, width)`` mean -- coordinator-sized traffic, not agent-stack
+    traffic."""
+    rho_eff = cfg.rho / cfg.n_agents
+    if cfg.engine_backend == "pallas" and fusible_prox(prox_h):
+        from repro.kernels.round_edge import ops as edge_ops
+
+        return edge_ops.round_uplink(
+            z, None if z_seen is z else z_seen, prox=prox_h,
+            rho_eff=rho_eff)
+    zbar = jnp.mean(z_seen, axis=0, keepdims=True)
+    if prox_h is None:
+        y = zbar
+    elif getattr(prox_h, "elementwise", False):
+        y = prox_h(zbar, rho_eff)
+    else:
+        y = compress_lib.pack_coord(
+            tree_map(lambda l: prox_h(l, rho_eff),
+                     compress_lib.unpack_coord(zbar, meta)), meta)
+    return y, 2.0 * y - z
+
+
+def agent_edge_packed(cfg: RoundConfig, u: jnp.ndarray, w: jnp.ndarray,
+                      x: jnp.ndarray, z: jnp.ndarray, y: jnp.ndarray,
+                      z_seen: jnp.ndarray,
+                      prox_h: ProxH = None) \
+        -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """:func:`agent_edge` on resident ``(N, width)`` buffers (``y`` is
+    the ``(1, width)`` coordinator buffer): Krasnosel'skii update +
+    participation selects, ``jnp.where`` semantics preserved so a
+    diverged (NaN) local solve cannot leak into inactive agents."""
+    if cfg.engine_backend == "pallas" and fusible_prox(prox_h):
+        from repro.kernels.round_edge import ops as edge_ops
+
+        return edge_ops.round_downlink(
+            x, w, z, u, None if z_seen is z else z_seen, prox=prox_h,
+            rho_eff=cfg.rho / cfg.n_agents, damping=cfg.damping)
+    mask = (u != 0).reshape(-1, 1)
+    x_new = jnp.where(mask, w, x)
+    z_upd = z + 2.0 * cfg.damping * (w - y)
+    return x_new, jnp.where(mask, z_upd, z)
+
+
+def packed_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
+                      z: jnp.ndarray, t: jnp.ndarray, key: jax.Array,
+                      local_solver: SolverAssignment,
+                      prox_h: ProxH = None) -> RoundResult:
+    """One Fed-PLT round on the RESIDENT packed state: ``x``/``z``/``t``
+    are ``(N, width)`` buffers laid out by ``meta`` (a static
+    :class:`repro.fed.compress.PackedMeta`), and the returned
+    :class:`RoundResult` carries buffers too (``y`` is ``(1, width)``).
+
+    Mirrors :func:`round_step` exactly -- same 3-way key split, same
+    edge formulas, same compressed-uplink ``t + u * q`` -- so packed
+    and tree trajectories are bitwise identical per realization
+    (asserted in tests).  ``local_solver`` must consume buffers: build
+    it with :func:`repro.fed.solvers.make_packed_local_solver` (or wrap
+    a tree solver with :func:`repro.fed.solvers.wrap_packed_solver`).
+    :func:`run_solvers` works unchanged -- a buffer is a pytree, group
+    slicing is row slicing."""
+    key, k_part, k_solve = jax.random.split(key, 3)
+
+    z_seen = t if cfg.compressed else z
+    y, v = coordinator_edge_packed(cfg, z, z_seen, meta, prox_h)
+
+    w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
+
+    u = participation_mask(k_part, cfg)
+    x_new, z_new = agent_edge_packed(cfg, u, w, x, z, y, z_seen, prox_h)
+
+    if cfg.compressed:
+        q = compress_lib.compress_increment_packed(z_new - t, meta, cfg)
+        t_new = t + u.astype(q.dtype).reshape(-1, 1) * q
+    else:
+        t_new = z_new
+
+    return RoundResult(x=x_new, z=z_new, t=t_new, y=y, next_key=key,
+                       u=u, aux=aux)
+
+
+def count_primitives(jaxpr, names: Sequence[str]) -> Dict[str, int]:
+    """Occurrences of each primitive in ``jaxpr`` (a ``ClosedJaxpr``'s
+    ``.jaxpr`` or any inner jaxpr), descending into sub-jaxprs (scan /
+    cond / pjit bodies).  The layout contract's measurement tool: tests,
+    the engine benchmark, and the CI smoke all assert the packed pallas
+    round's state path through it (zero ``concatenate`` / ``gather``)."""
+    counts = {n: 0 for n in names}
+    _count_into(jaxpr, counts)
+    return counts
+
+
+def _count_into(jaxpr, counts) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in counts:
+            counts[eqn.primitive.name] += 1
+        for v in eqn.params.values():
+            for vv in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(vv, "jaxpr", None)
+                if inner is not None:
+                    _count_into(inner, counts)
+                elif hasattr(vv, "eqns"):
+                    _count_into(vv, counts)
 
 
 # ---------------------------------------------------------------------------

@@ -37,8 +37,18 @@ from repro.models.model import Model
 
 
 class FedState(NamedTuple):
-    x: Any              # pytree, leaves (A, ...)
-    z: Any              # pytree, leaves (A, ...)
+    """Per-agent federated state.
+
+    Tree layout (default): ``x``/``z``/``t`` are parameter pytrees with
+    leaves ``(A, ...)``.  Packed layout (``spec.state_layout ==
+    "packed"``, engine layout contract): each is ONE resident
+    ``(A, width)`` buffer laid out by the static
+    :func:`packed_layout` meta -- packed once in :func:`init_state`,
+    unpacked only at the API boundary (:func:`consensus_model`,
+    checkpoint restore targets)."""
+
+    x: Any              # pytree, leaves (A, ...) -- or (A, width) buffer
+    z: Any              # pytree, leaves (A, ...) -- or (A, width) buffer
     step: jnp.ndarray
     # coordinator's copy of z -- only materialized when the z-exchange is
     # compressed (None otherwise: at model scale t doubles state memory)
@@ -72,8 +82,9 @@ class FedConfig:
     L: float = 0.0
     compression: str = "none"        # z-uplink compressor registry name
     compress_ratio: float = 0.25
-    compress_backend: str = "xla"    # "xla" per-leaf | "pallas" packed
+    compress_backend: str = "xla"    # "auto" | "xla" per-leaf | "pallas"
     engine_backend: str = "xla"      # round edges: "xla" | "pallas" fused
+    state_layout: str = "tree"       # "tree" | "packed" resident buffer
     damping: float = 1.0             # Krasnosel'skii relaxation
 
     def to_spec(self) -> FedSpec:
@@ -91,15 +102,39 @@ class FedConfig:
                                         ratio=self.compress_ratio,
                                         backend=self.compress_backend),
             engine_backend=self.engine_backend,
+            state_layout=self.state_layout,
             use_pallas=self.use_pallas_update)
 
 
+def packed_layout(model: Model, fcfg):
+    """The static :class:`repro.fed.compress.PackedMeta` of a model's
+    agent-stacked state -- pure shape arithmetic over
+    ``jax.eval_shape(model.init)``, so no parameters are materialized.
+    One meta serves the whole run (init, every round, the API
+    boundary)."""
+    from repro.fed import compress as compress_lib
+
+    spec = as_spec(fcfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((spec.n_agents,) + s.shape,
+                                       s.dtype), shapes)
+    return compress_lib.packed_meta(stacked)
+
+
 def init_state(model: Model, key: jax.Array, fcfg) -> FedState:
-    """``fcfg`` may be a legacy :class:`FedConfig` or a ``FedSpec``."""
+    """``fcfg`` may be a legacy :class:`FedConfig` or a ``FedSpec``.
+
+    Under the packed layout the broadcast parameter stack is packed
+    ONCE here -- the round loop never packs again."""
     spec = as_spec(fcfg)
     params = model.init(key)
     stacked = jax.tree_util.tree_map(
         lambda p: jnp.broadcast_to(p, (spec.n_agents,) + p.shape), params)
+    if spec.state_layout == "packed":
+        from repro.fed.compress import pack_leaves
+
+        stacked = pack_leaves(stacked)[0]
     t = stacked if spec.compression.name != "none" else None
     return FedState(x=stacked, z=stacked, step=jnp.zeros((), jnp.int32),
                     t=t)
@@ -129,6 +164,23 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
     mu, L = spec.moduli()
     groups = spec.resolved_groups()
     group_cfgs = spec.group_solver_configs()
+    # packed layout: one static meta; solvers are built on the resident
+    # buffer (gd/agd/sgd run directly on it, the gradient oracle
+    # unpacking inside the jit -- see repro.fed.solvers)
+    meta = (packed_layout(model, spec)
+            if spec.state_layout == "packed" else None)
+    if meta is not None:
+        from repro.fed.solvers import make_packed_local_solver
+
+        def make_solver(cfg_s, fgrad, mu_s, L_s):
+            return make_packed_local_solver(
+                cfg_s, fgrad, spec.rho, mu_s, L_s, meta=meta,
+                use_pallas=spec.use_pallas, has_aux=True)
+    else:
+        def make_solver(cfg_s, fgrad, mu_s, L_s):
+            return engine.make_local_solver(
+                cfg_s, fgrad, spec.rho, mu_s, L_s,
+                use_pallas=spec.use_pallas, has_aux=True)
 
     def per_agent_loss(params_i, batch_i):
         return model.loss_fn(params_i, batch=batch_i, remat=use_remat)
@@ -146,9 +198,7 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
             return fgrad
 
         if groups is None:
-            local_solver = engine.make_local_solver(
-                scfg, fgrad_for(batch), spec.rho, mu, L,
-                use_pallas=spec.use_pallas, has_aux=True)
+            local_solver = make_solver(scfg, fgrad_for(batch), mu, L)
         else:
             # heterogeneous groups: each contiguous agent slice gets its
             # own registered solver over its slice of the batch, with
@@ -160,15 +210,19 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
                     lambda b, lo=start, hi=stop: b[lo:hi], batch)
                 mu_g, L_g = spec.moduli_for(gscfg.step_size)
                 local_solver.append(engine.SolverGroup(
-                    g.size, engine.make_local_solver(
-                        gscfg, fgrad_for(batch_g), spec.rho, mu_g, L_g,
-                        use_pallas=spec.use_pallas, has_aux=True)))
+                    g.size, make_solver(gscfg, fgrad_for(batch_g),
+                                        mu_g, L_g)))
                 start = stop
             local_solver = tuple(local_solver)
 
         t = state.t if ecfg.compressed else state.z
-        res = engine.round_step(ecfg, state.x, state.z, t, rkey,
-                                local_solver, prox_h=prox_h)
+        if meta is not None:
+            res = engine.packed_round_step(ecfg, meta, state.x, state.z,
+                                           t, rkey, local_solver,
+                                           prox_h=prox_h)
+        else:
+            res = engine.round_step(ecfg, state.x, state.z, t, rkey,
+                                    local_solver, prox_h=prox_h)
 
         # aux is the (N_e, A) per-epoch loss stack when homogeneous, a
         # tuple of per-group (N_e_g, size_g) stacks when grouped (epoch
@@ -192,9 +246,17 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
     return train_step
 
 
-def consensus_model(state: FedState):
-    """The deployable model: the coordinator average of the agent states."""
-    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), state.x)
+def consensus_model(state: FedState, meta=None):
+    """The deployable model: the coordinator average of the agent states.
+
+    ``meta`` is required for a packed-layout state (the API-boundary
+    unpack of the layout contract); the tree layout ignores it."""
+    x = state.x
+    if meta is not None:
+        from repro.fed.compress import unpack_leaves
+
+        x = unpack_leaves(x, meta)
+    return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), x)
 
 
 def privacy_report(fcfg, n_rounds: int, local_dataset_size: int,

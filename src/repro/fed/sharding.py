@@ -128,18 +128,34 @@ def param_specs(params, *, fsdp_axis: Optional[str] = "data",
 def fed_state_specs(stacked_params, *, fsdp_axis: Optional[str] = "data",
                     agent_axis: Optional[str] = None,
                     axis_sizes: Optional[dict] = None,
-                    compressed: bool = False):
+                    compressed: bool = False,
+                    packed: bool = False):
     """PartitionSpec pytree for a :class:`repro.fed.runtime.FedState`.
 
     ``stacked_params``: the agent-stacked parameter pytree (or its
     ShapeDtypeStructs) -- x, z, and (when ``compressed``) the
     coordinator copy t all share its layout; the step counter is
     replicated.
+
+    ``packed``: specs for the packed resident layout instead (engine
+    layout contract) -- each state variable is ONE ``(A, width)``
+    buffer: rows shard over ``agent_axis``, columns over ``fsdp_axis``
+    when the lane-aligned width divides (the flat-slab sharding ROADMAP
+    item 2 targets; per-leaf path rules do not apply to a buffer).
     """
     from repro.fed.runtime import FedState
 
-    pspec = param_specs(stacked_params, fsdp_axis=fsdp_axis,
-                        agent_axis=agent_axis, axis_sizes=axis_sizes)
+    if packed:
+        from repro.fed.compress import packed_meta
+
+        width = packed_meta(stacked_params).width
+        col = (fsdp_axis if fsdp_axis is not None
+               and width % _axis_size(fsdp_axis, axis_sizes or {}) == 0
+               else None)
+        pspec = P(agent_axis, col)
+    else:
+        pspec = param_specs(stacked_params, fsdp_axis=fsdp_axis,
+                            agent_axis=agent_axis, axis_sizes=axis_sizes)
     return FedState(x=pspec, z=pspec, step=P(),
                     t=pspec if compressed else None)
 

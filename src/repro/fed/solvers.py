@@ -90,6 +90,15 @@ def make_local_solver(solver_cfg, fgrad, rho: float, mu: float = 0.0,
 # path.  One constant, imported there -- the lists must not drift.
 CORE_SOLVERS = ("gd", "agd", "sgd", "noisy_gd")
 
+# Core solvers whose update is purely elementwise on the state: under
+# the packed layout they run core/solvers.local_train DIRECTLY on the
+# resident (N, width) buffer, bit-identical per column to the per-leaf
+# tree path.  noisy_gd is excluded -- its per-leaf noise folds the key
+# per leaf, so a single buffer would change the DP noise stream -- and
+# clipped runs are excluded at call time (the clip norm reduces per
+# leaf before summing across the tree; one buffer would reorder it).
+PACKED_DIRECT_SOLVERS = ("gd", "agd", "sgd")
+
 
 def _core_local_train(scfg, fgrad, rho, mu, L, *, use_pallas, has_aux):
     from repro.core.solvers import local_train
@@ -108,3 +117,71 @@ def _core_local_train(scfg, fgrad, rho, mu, L, *, use_pallas, has_aux):
 for _name in CORE_SOLVERS:
     register_solver(_name)(_core_local_train)
 del _name
+
+
+# ---------------------------------------------------------------------------
+# Packed-layout adapters (repro.fed.engine layout contract): solvers for
+# the resident (N, width) buffer
+# ---------------------------------------------------------------------------
+
+def wrap_packed_solver(solver: LocalSolver, meta) -> LocalSolver:
+    """Adapt a tree-form :data:`LocalSolver` to the packed layout:
+    unpack the resident buffers, run the solver on the tree, pack the
+    result -- all inside the round's jit.  The exact-bits fallback for
+    solvers whose internals depend on the leaf decomposition."""
+    from repro.fed.compress import pack_leaves, unpack_leaves
+
+    def packed(x_buf, v_buf, key):
+        w, aux = solver(unpack_leaves(x_buf, meta),
+                        unpack_leaves(v_buf, meta), key)
+        return pack_leaves(w)[0], aux
+
+    return packed
+
+
+def make_packed_local_solver(solver_cfg, fgrad, rho: float,
+                             mu: float = 0.0, L: float = 0.0, *, meta,
+                             use_pallas: bool = False,
+                             has_aux: bool = False) -> LocalSolver:
+    """Build a :data:`LocalSolver` operating on the resident packed
+    buffer (``meta`` is its static :class:`~repro.fed.compress.PackedMeta`).
+
+    :data:`PACKED_DIRECT_SOLVERS` with no clipping run
+    ``core/solvers.local_train`` directly on the ``(N, width)`` buffer
+    -- the update is elementwise, so every column computes exactly what
+    the per-leaf path computes -- with the gradient oracle wrapped as
+    unpack-inside-jit (``unpack_leaves -> fgrad -> pack_leaves``): the
+    state path itself carries zero pack/unpack; the only remaining
+    layout traffic is the oracle's slice/update-slice chain on gradient
+    values.  ``noisy_gd`` and clipped configurations instead fall back
+    to :func:`wrap_packed_solver` around the registered tree solver,
+    preserving their exact PRNG/reduction streams (see
+    :data:`PACKED_DIRECT_SOLVERS`)."""
+    from repro.fed.compress import pack_leaves, unpack_leaves
+
+    direct = (solver_cfg.name in PACKED_DIRECT_SOLVERS
+              and solver_cfg.clip is None)
+    if not direct:
+        return wrap_packed_solver(
+            make_local_solver(solver_cfg, fgrad, rho, mu, L,
+                              use_pallas=use_pallas, has_aux=has_aux),
+            meta)
+
+    from repro.core.solvers import local_train
+
+    def fgrad_buf(w_buf, key):
+        out = fgrad(unpack_leaves(w_buf, meta), key)
+        if has_aux:
+            g, aux = out
+            return pack_leaves(g)[0], aux
+        return pack_leaves(out)[0]
+
+    def solver(x_buf, v_buf, key):
+        out = local_train(fgrad_buf, x_buf, v_buf, rho, solver_cfg, key,
+                          mu, L, batched=True, has_aux=has_aux,
+                          use_pallas=use_pallas)
+        if has_aux:
+            return out
+        return out, None
+
+    return solver
