@@ -226,6 +226,71 @@ def _round_structure():
     return rows, payload
 
 
+def _async_rounds(quick):
+    """Async (bounded-staleness) rounds vs the synchronous round at
+    engine scale: N=64 agents on the packed layout with an elementwise
+    oracle, staleness bounds 0 / 2 / 8.  The async round adds only
+    per-agent select/counter arithmetic on top of the synchronous edges
+    (the arrival mask streams through the same downlink path as the
+    participation mask), so these rows bound the steady-state cost of
+    the staleness machinery itself -- the broker's wall-clock win from
+    not blocking on stragglers is a host-side property benchmarks on
+    synthetic latencies would only restate."""
+    from repro.core.solvers import SolverConfig
+    from repro.fed import async_engine
+    from repro.fed import compress as compress_lib
+    from repro.fed.solvers import make_packed_local_solver
+
+    iters = 5 if quick else 20
+    n = EDGE_N_AGENTS
+    tree = {f"l{i}": jnp.ones((n, w))
+            for i, w in enumerate(EDGE_WIDTHS[:16])}
+    meta = compress_lib.packed_meta(tree)
+    buf, _ = compress_lib.pack_leaves(tree)
+
+    def fgrad(w, k):
+        return jax.tree_util.tree_map(lambda l: 0.1 * l, w)
+
+    cfg0 = engine.RoundConfig(n_agents=n, participation=0.7,
+                              damping=0.5, state_layout="packed")
+    scfg = SolverConfig(name="gd", n_epochs=2, step_size=0.1)
+    solver = make_packed_local_solver(scfg, fgrad, cfg0.rho, 0.1, 1.0,
+                                      meta=meta)
+    key = jax.random.PRNGKey(0)
+    m_total = int(meta.m_total)
+    shape_s = f"N={n};m={m_total};leaves={len(tree)}"
+    rows, payload = [], []
+
+    sync_f = jax.jit(lambda x, z, t, k: engine.packed_round_step(
+        cfg0, meta, x, z, t, k, solver))
+    ms0 = _best_ms(sync_f, (buf, buf, buf, key), iters)
+    rows.append(f"engine,async:sync_ref,{ms0:.2f},1.00x,{shape_s}")
+    payload.append(dict(kind="async_round", case="sync_ref",
+                        max_staleness=None, ms_per_round=ms0,
+                        rel_to_sync=1.0, n_agents=n, m_total=m_total))
+
+    staleness0 = async_engine.init_staleness(n)
+    y_tag0 = jnp.zeros_like(buf)
+    for K in (0, 2, 8):
+        cfg = engine.RoundConfig(
+            n_agents=n, participation=0.7, damping=0.5,
+            state_layout="packed",
+            staleness=engine.StalenessConfig(mode="stale",
+                                             max_staleness=K))
+        f = jax.jit(lambda x, z, t, yt, st, k, cfg=cfg:
+                    async_engine.packed_async_round_step(
+                        cfg, meta, x, z, t, yt, st, k, solver))
+        ms = _best_ms(f, (buf, buf, buf, y_tag0, staleness0, key),
+                      iters)
+        rows.append(f"engine,async:stale_K{K},{ms:.2f},"
+                    f"{ms / ms0:.2f}x,{shape_s}")
+        payload.append(dict(kind="async_round", case=f"stale_K{K}",
+                            max_staleness=K, ms_per_round=ms,
+                            rel_to_sync=ms / ms0, n_agents=n,
+                            m_total=m_total))
+    return rows, payload
+
+
 def _edge_trees():
     key = jax.random.PRNGKey(0)
     tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
@@ -384,10 +449,13 @@ def _round_edge(quick):
 def run(quick=True):
     round_rows, round_payload = _rounds(quick)
     struct_rows, struct_payload = _round_structure()
+    async_rows, async_payload = _async_rounds(quick)
     edge_rows, edge_payload = _round_edge(quick)
-    payload = {"cases": round_payload + struct_payload + edge_payload,
+    payload = {"cases": (round_payload + struct_payload + async_payload
+                         + edge_payload),
                "quick": bool(quick)}
-    return round_rows + struct_rows + edge_rows, payload
+    return (round_rows + struct_rows + async_rows + edge_rows,
+            payload)
 
 
 if __name__ == "__main__":

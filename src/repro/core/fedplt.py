@@ -34,6 +34,11 @@ class FedPLTState(NamedTuple):
     # the coordinator then sees z exactly and a separate copy would just
     # double z-memory.
     t: Optional[jnp.ndarray] = None
+    # bounded-staleness async rounds only (None when synchronous):
+    # per-agent pulled coordinator point and staleness counters (the
+    # carry of repro.fed.async_engine.async_round_step)
+    y_tag: Optional[jnp.ndarray] = None     # (N, n)
+    staleness: Optional[jnp.ndarray] = None  # (N,) int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +71,12 @@ class FedPLTConfig:
     # is the paper's PRS; damping = 1/2 is Douglas-Rachford -- needed to
     # stabilize aggressively compressed exchanges (see tests)
     damping: float = 1.0
+    # bounded-staleness async rounds ("stale"): the participation draw
+    # becomes an arrival draw and stragglers keep training against their
+    # stale reflection up to max_staleness rounds (repro.fed.async_engine;
+    # max_staleness=0 reproduces the synchronous engine bitwise)
+    async_mode: str = "off"
+    max_staleness: int = 0
 
     def to_spec(self, n_agents: Optional[int] = None):
         """The equivalent :class:`repro.fed.api.FedSpec` (the front-door
@@ -91,7 +102,9 @@ class FedPLTConfig:
                 energy=self.compress_energy,
                 backend=self.compress_backend),
             engine_backend=self.engine_backend,
-            state_layout=self.state_layout)
+            state_layout=self.state_layout,
+            async_mode=self.async_mode,
+            max_staleness=self.max_staleness)
 
 
 class FedPLT:
@@ -139,7 +152,10 @@ class FedPLT:
             compress_energy=config.compress_energy,
             compress_backend=config.compress_backend,
             engine_backend=config.engine_backend,
-            state_layout=config.state_layout)
+            state_layout=config.state_layout,
+            staleness=engine.StalenessConfig(
+                mode=config.async_mode,
+                max_staleness=config.max_staleness))
         # packed layout: the dense state is single-leaf, so its resident
         # (N, n) buffer IS the stacked array (pack_leaves fast path, no
         # lane padding) -- the meta is pure shape arithmetic and the
@@ -168,6 +184,7 @@ class FedPLT:
                 start += size
             self._solvers = tuple(self._solvers)
         self._round = jax.jit(self._round_impl)
+        self._round_arrival = jax.jit(self._round_core)
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array) -> FedPLTState:
@@ -180,9 +197,13 @@ class FedPLT:
             x0 = jnp.zeros((N, n))
         # t (the coordinator's copy) is only materialized when the
         # exchange is compressed; uncompressed it would double z-memory
+        stale = self._ecfg.staleness.enabled
         return FedPLTState(x=x0, z=x0, y=jnp.zeros(n), key=k_state,
                            k=jnp.zeros((), jnp.int32),
-                           t=x0 if self._ecfg.compressed else None)
+                           t=x0 if self._ecfg.compressed else None,
+                           y_tag=jnp.zeros((N, n)) if stale else None,
+                           staleness=(jnp.zeros((N,), jnp.int32)
+                                      if stale else None))
 
     # ------------------------------------------------------------------
     def _fgrad(self, data, w, key, scfg=None):
@@ -246,9 +267,34 @@ class FedPLT:
 
         return solver
 
-    def _round_impl(self, state: FedPLTState) -> FedPLTState:
+    def _round_core(self, state: FedPLTState, arrival=None):
+        """One round; returns ``(next_state, u)`` with ``u`` the round's
+        realized (N,) participation / arrival mask.  ``arrival``
+        (async mode only) substitutes a recorded schedule row for the
+        Bernoulli draw -- the broker replay path."""
         compressed = self._ecfg.compressed
         t = state.t if compressed else state.z
+        if self._ecfg.staleness.enabled:
+            from repro.fed import async_engine
+
+            step = (async_engine.packed_async_round_step
+                    if self._meta is not None
+                    else async_engine.async_round_step)
+            extra = (self._meta,) if self._meta is not None else ()
+            res = step(self._ecfg, *extra, state.x, state.z, t,
+                       state.y_tag, state.staleness, state.key,
+                       self._solvers, prox_h=self.prox_h,
+                       arrival=arrival)
+            y = res.y.reshape(-1) if self._meta is not None else res.y
+            return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
+                               k=state.k + 1,
+                               t=res.t if compressed else None,
+                               y_tag=res.y_tag,
+                               staleness=res.staleness), res.u
+        if arrival is not None:
+            raise ValueError("arrival schedules require async_mode="
+                             "'stale' (synchronous rounds draw "
+                             "participation internally)")
         if self._meta is not None:
             res = engine.packed_round_step(
                 self._ecfg, self._meta, state.x, state.z, t, state.key,
@@ -261,24 +307,58 @@ class FedPLT:
             y = res.y
         return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
                            k=state.k + 1,
-                           t=res.t if compressed else None)
+                           t=res.t if compressed else None), res.u
+
+    def _round_impl(self, state: FedPLTState) -> FedPLTState:
+        return self._round_core(state)[0]
 
     # ------------------------------------------------------------------
     def round(self, state: FedPLTState) -> FedPLTState:
         return self._round(state)
+
+    def round_with_arrival(self, state: FedPLTState, arrival=None):
+        """One jitted round returning ``(next_state, u)``; ``arrival``
+        optionally replaces the arrival draw with a recorded (N,) 0/1
+        row (async mode) -- the broker's numerics entry point."""
+        return self._round_arrival(state, arrival)
 
     def run(self, key: jax.Array, n_rounds: int):
         """Run ``n_rounds`` rounds; returns (final_state, criterion_history).
 
         criterion_history[k] = || sum_i grad f_i(x_bar_k) ||^2 *after* round k.
         """
+        state, crit, _ = self.run_recorded(key, n_rounds)
+        return state, crit
+
+    def run_recorded(self, key: jax.Array, n_rounds: int):
+        """:meth:`run` that also returns the realized ``(n_rounds, N)``
+        arrival schedule (the stacked per-round masks -- feed it to
+        :func:`repro.fed.api.effective_privacy_report` or replay it with
+        :meth:`replay`)."""
         state = self.init(key)
 
         def body(s, _):
-            s = self._round_impl(s)
+            s, u = self._round_core(s)
+            return s, (self.problem.criterion(s.x), u)
+
+        state, (crit, sched) = jax.lax.scan(body, state, None,
+                                            length=n_rounds)
+        return state, crit, sched
+
+    def replay(self, key: jax.Array, schedule):
+        """Re-run a recorded ``(n_rounds, N)`` arrival schedule through
+        the in-jit async model; returns (final_state, criterion_history)
+        bit-identical to the run that recorded it (same init key)."""
+        if not self._ecfg.staleness.enabled:
+            raise ValueError("replay requires async_mode='stale'")
+        schedule = jnp.asarray(schedule, jnp.float32)
+        state = self.init(key)
+
+        def body(s, row):
+            s, _ = self._round_core(s, row)
             return s, self.problem.criterion(s.x)
 
-        state, crit = jax.lax.scan(body, state, None, length=n_rounds)
+        state, crit = jax.lax.scan(body, state, schedule)
         return state, crit
 
     # convenience -------------------------------------------------------

@@ -114,6 +114,13 @@ class AgentPrivacy:
     adp_eps: float
     rdp_order: float
     eps_ceiling: float
+    # Async (bounded-staleness) runs compose over the agent's REALIZED
+    # schedule: K is its effective round count (rounds of local epochs
+    # actually released; None = the report's nominal K) and arrivals how
+    # many increments it transmitted.  Synchronous reports leave both
+    # None.
+    K: int = None
+    arrivals: int = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,26 +161,46 @@ class PrivacyReport:
 
     @staticmethod
     def build_per_agent(sensitivities, mu, tau, qs, gammas, K,
-                        n_epochs_seq, delta=1e-5) -> "PrivacyReport":
+                        n_epochs_seq, delta=1e-5, Ks=None,
+                        arrivals=None) -> "PrivacyReport":
         """Per-agent Prop. 4 accounting: one (eps_i, delta) row per
         agent, each with its own sensitivity / q_i / gamma_i / N_e,i and
         its own optimized Renyi order.  The headline eps is the max over
-        agents."""
+        agents.
+
+        ``Ks`` (optional) gives each agent its own EFFECTIVE round count
+        -- under bounded-staleness async rounds, the rounds of local
+        epochs agent i actually released (derived from the realized
+        arrival schedule by ``repro.fed.async_engine.effective_counts``;
+        the K * N_e product of Prop. 4 then reflects released
+        information only).  ``arrivals`` (optional) annotates each row
+        with the agent's increment count; both default to the
+        synchronous reading where every agent composes over the nominal
+        ``K`` rounds."""
+        effective = Ks is not None
+        if Ks is None:
+            Ks = [K] * len(qs)
+        if arrivals is None:
+            arrivals = [None] * len(qs)
         rows = []
-        for i, (s, q, gamma, ne) in enumerate(
-                zip(sensitivities, qs, gammas, n_epochs_seq)):
-            eps, lam = adp_epsilon(s, mu, tau, q, gamma, K, ne, delta)
+        for i, (s, q, gamma, ne, ki, ai) in enumerate(
+                zip(sensitivities, qs, gammas, n_epochs_seq, Ks,
+                    arrivals)):
+            eps, lam = adp_epsilon(s, mu, tau, q, gamma, ki, ne, delta)
             rows.append(AgentPrivacy(
                 agent=i, q=q, n_epochs=ne, gamma=gamma, adp_eps=eps,
                 rdp_order=lam,
                 eps_ceiling=rdp_to_adp(
-                    rdp_epsilon_limit(lam, s, mu, tau, q), lam, delta)))
+                    rdp_epsilon_limit(lam, s, mu, tau, q), lam, delta),
+                K=ki if effective else None, arrivals=ai))
         worst = max(rows, key=lambda r: r.adp_eps)
+        worst_K = worst.K if worst.K is not None else K
         return PrivacyReport(
             tau=tau, K=K, n_epochs=worst.n_epochs,
             rdp_eps=rdp_epsilon(worst.rdp_order,
                                 sensitivities[worst.agent], mu, tau,
-                                worst.q, worst.gamma, K, worst.n_epochs),
+                                worst.q, worst.gamma, worst_K,
+                                worst.n_epochs),
             rdp_order=worst.rdp_order,
             adp_eps=worst.adp_eps, adp_delta=delta,
             eps_ceiling=max(r.eps_ceiling for r in rows),

@@ -258,6 +258,20 @@ class FedSpec:
         flag="--state-layout", choices=["tree", "packed"],
         help="round-to-round state representation (packed = one "
              "resident agent-axis buffer, zero per-round pack/unpack)"))
+    # "stale": bounded-staleness async rounds -- the participation draw
+    # becomes an ARRIVAL draw, non-arrived agents keep training against
+    # their stale reflection, and an agent is forced to arrive when its
+    # work is max_staleness rounds old.  max_staleness=0 reproduces the
+    # synchronous engine bitwise per realization (contract in
+    # repro.fed.async_engine).
+    async_mode: str = dataclasses.field(default="off", metadata=_cli(
+        flag="--async-mode", choices=["off", "stale"],
+        help="async round mode (stale = bounded-staleness arrivals; "
+             "off = bulk-synchronous rounds)"))
+    max_staleness: int = dataclasses.field(default=0, metadata=_cli(
+        flag="--max-staleness", arg_type=int,
+        help="staleness bound K: an agent holding K-round-old work is "
+             "forced to arrive (0 = synchronous semantics)"))
 
     def __post_init__(self):
         groups = self.agent_groups
@@ -331,7 +345,14 @@ class FedSpec:
             compress_energy=self.compression.energy,
             compress_backend=self.compression.backend,
             engine_backend=self.engine_backend,
-            state_layout=self.state_layout)
+            state_layout=self.state_layout,
+            staleness=self.staleness_config())
+
+    def staleness_config(self) -> engine.StalenessConfig:
+        """The engine :class:`repro.fed.engine.StalenessConfig` this
+        spec denotes (validates mode / bound on construction)."""
+        return engine.StalenessConfig(mode=self.async_mode,
+                                      max_staleness=self.max_staleness)
 
     def moduli_for(self, gamma: Optional[float]) \
             -> tuple[float, Optional[float]]:
@@ -408,6 +429,7 @@ class FedSpec:
             raise ValueError(
                 f"unknown state layout {self.state_layout!r}; "
                 f"known: {', '.join(engine.ENGINE_LAYOUTS)}")
+        self.staleness_config()     # bad mode / bound -> ValueError
         if self.weight_decay < 0.0:
             raise ValueError("weight_decay must be >= 0")
         if self.weight_decay != 0.0 and self.prox_h not in (
@@ -487,7 +509,9 @@ class FedSpec:
             compress_backend=self.compression.backend,
             engine_backend=self.engine_backend,
             state_layout=self.state_layout,
-            damping=self.damping)
+            damping=self.damping,
+            async_mode=self.async_mode,
+            max_staleness=self.max_staleness)
 
 
 def as_spec(cfg: Any) -> FedSpec:
@@ -580,15 +604,26 @@ def privacy_report(spec: Any, n_rounds: int,
             n_epochs=spec.n_epochs, delta=delta_eff)
 
     # per-agent accounting: expand groups / q_i to one row per agent
+    qs, gammas, epochs, sensitivities = _per_agent_inputs(spec, qs,
+                                                          local_dataset_size)
+    return PrivacyReport.build_per_agent(
+        sensitivities=sensitivities, mu=mu_eff, tau=p.tau, qs=qs,
+        gammas=gammas, K=n_rounds, n_epochs_seq=epochs, delta=delta_eff)
+
+
+def _per_agent_inputs(spec: "FedSpec", qs, local_dataset_size):
+    """Expand a validated spec + dataset size(s) to one accounting row
+    per agent: ``(qs, gammas, epochs, sensitivities)``, each length N."""
     if spec.n_agents is None:
         raise ValueError("per-agent privacy_report needs a resolved "
                          "n_agents")
     N = spec.n_agents
     if qs is None:
-        qs = [local_dataset_size] * N
+        qs = [int(local_dataset_size)] * N
     if len(qs) != N:
         raise ValueError(f"local_dataset_size has {len(qs)} entries for "
                          f"n_agents={N}")
+    groups = spec.resolved_groups()
     if groups is None:
         gammas = [_resolve_gamma(spec, spec.gamma)] * N
         epochs = [spec.n_epochs] * N
@@ -597,11 +632,63 @@ def privacy_report(spec: Any, n_rounds: int,
         for g in groups:
             gammas.extend([_resolve_gamma(spec, g.gamma)] * g.size)
             epochs.extend([g.n_epochs] * g.size)
-    sensitivities = [p.clip * q if p.clip is not None else 1.0
-                     for q in qs]
+    clip = spec.privacy.clip
+    sensitivities = [clip * q if clip is not None else 1.0 for q in qs]
+    return qs, gammas, epochs, sensitivities
+
+
+def effective_privacy_report(spec: Any, schedule,
+                             local_dataset_size: Union[int, Sequence[int]],
+                             delta: Optional[float] = None, *,
+                             mu: Optional[float] = None):
+    """Per-agent privacy report under a REALIZED async arrival schedule.
+
+    ``schedule`` is the ``(n_rounds, n_agents)`` 0/1 arrival record of a
+    bounded-staleness run (stacked per-round arrival masks -- a broker's
+    ``ArrivalSchedule.arrivals`` or the stacked ``u`` of the in-jit
+    model).  Staleness changes the DP *composition*, not the mechanism:
+    agent i released ``arrivals_i`` increments carrying
+    ``released_rounds_i`` rounds of local epochs (an increment ``s``
+    rounds stale carries ``s + 1`` rounds; work discarded at the bound
+    was never transmitted and charges nothing).  The report therefore
+    composes agent i over ``K_i = released_rounds_i`` effective rounds
+    instead of the nominal round count -- always the per-agent table,
+    even for a homogeneous spec, because realized schedules are
+    per-agent by nature.
+    """
+    from repro.core.privacy import PrivacyReport
+    from repro.fed.async_engine import effective_counts
+
+    spec = as_spec(spec).validate()
+    p = spec.privacy
+    if p.tau <= 0.0:
+        raise ValueError("effective_privacy_report requires tau > 0")
+    mu_eff = mu if mu is not None else spec.weight_decay + 1.0 / spec.rho
+    if mu_eff <= 0.0:
+        raise ValueError("privacy accounting requires a strongly convex "
+                         "local objective (mu > 0)")
+    delta_eff = delta if delta is not None else p.delta
+
+    if isinstance(local_dataset_size, (str, bytes)):
+        raise TypeError("local_dataset_size must be an int or a "
+                        "sequence of per-agent ints, not a string")
+    try:
+        qs = [int(q) for q in local_dataset_size]
+    except TypeError:
+        qs = None
+    qs, gammas, epochs, sensitivities = _per_agent_inputs(spec, qs,
+                                                          local_dataset_size)
+    import numpy as _np
+    sched = _np.asarray(schedule)
+    if sched.ndim != 2 or sched.shape[1] != spec.n_agents:
+        raise ValueError(f"schedule must be (n_rounds, n_agents="
+                         f"{spec.n_agents}), got shape {sched.shape}")
+    arrivals, released = effective_counts(sched, spec.max_staleness)
     return PrivacyReport.build_per_agent(
         sensitivities=sensitivities, mu=mu_eff, tau=p.tau, qs=qs,
-        gammas=gammas, K=n_rounds, n_epochs_seq=epochs, delta=delta_eff)
+        gammas=gammas, K=int(sched.shape[0]), n_epochs_seq=epochs,
+        delta=delta_eff, Ks=[int(k) for k in released],
+        arrivals=[int(a) for a in arrivals])
 
 
 # ---------------------------------------------------------------------------
@@ -682,6 +769,17 @@ class DenseTrainer(FedTrainer):
         """Run from a fresh init; returns (state, criterion_history)."""
         return self.algo.run(key, n_rounds)
 
+    def run_recorded(self, key: jax.Array, n_rounds: int):
+        """:meth:`run` that also returns the realized ``(n_rounds, N)``
+        arrival schedule (feed it to :meth:`effective_privacy_report`
+        or :meth:`replay`)."""
+        return self.algo.run_recorded(key, n_rounds)
+
+    def replay(self, key: jax.Array, schedule):
+        """Re-run a recorded arrival schedule through the in-jit async
+        model (bit-identical to the run that recorded it)."""
+        return self.algo.replay(key, schedule)
+
     def consensus(self, state):
         return self.algo.x_bar(state)
 
@@ -695,6 +793,17 @@ class DenseTrainer(FedTrainer):
         return privacy_report(self._resolved, n_rounds, q, delta,
                               mu=self.algo.mu if self.algo.mu > 0
                               else None)
+
+    def effective_privacy_report(self, schedule,
+                                 local_dataset_size=None,
+                                 delta: Optional[float] = None):
+        """Per-agent report under a realized async arrival schedule
+        (see :func:`repro.fed.api.effective_privacy_report`)."""
+        q = (local_dataset_size if local_dataset_size is not None
+             else self.problem.q)
+        return effective_privacy_report(
+            self._resolved, schedule, q, delta,
+            mu=self.algo.mu if self.algo.mu > 0 else None)
 
 
 class ModelTrainer(FedTrainer):
@@ -722,14 +831,20 @@ class ModelTrainer(FedTrainer):
     def init(self, key: jax.Array):
         return self._runtime.init_state(self.model, key, self.spec)
 
-    def step(self, state, batch, key: jax.Array):
-        """One jitted Fed-PLT round on an agent-stacked batch."""
-        return self._step(state, batch, key)
+    def step(self, state, batch, key: jax.Array, arrival=None):
+        """One jitted Fed-PLT round on an agent-stacked batch.
+        ``arrival`` (async mode) replaces the arrival draw with a
+        recorded (N,) 0/1 schedule row -- broker numerics / replay."""
+        return self._step(state, batch, key, arrival)
 
     def run(self, key: jax.Array, n_rounds: int, batches):
         """Run from a fresh init.  ``batches`` is either a callable
         ``i -> batch`` or an iterable of per-round batches; returns
-        ``(state, metrics_history)``."""
+        ``(state, metrics_history)``.  Scalar metrics come back as
+        floats; vector metrics (the async mode's per-agent ``arrivals``
+        row) as numpy arrays."""
+        import numpy as np
+
         state = self.init(key)
         if callable(batches):
             get = batches
@@ -739,7 +854,9 @@ class ModelTrainer(FedTrainer):
         history = []
         for i in range(n_rounds):
             state, m = self.step(state, get(i), jax.random.fold_in(key, i))
-            history.append({k: float(v) for k, v in m.items()})
+            history.append({
+                k: float(v) if getattr(v, "ndim", 0) == 0 else np.asarray(v)
+                for k, v in m.items()})
         return state, history
 
     def consensus(self, state):

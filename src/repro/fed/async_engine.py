@@ -1,0 +1,355 @@
+"""Bounded-staleness async rounds: the deterministic in-jit model.
+
+The engine's :func:`repro.fed.engine.round_step` is bulk-synchronous:
+every agent trains against THIS round's reflection and the coordinator
+averages whoever the participation draw selected.  Production
+coordinators are not synchronous -- agents return increments late, and
+the coordinator applies them as they arrive.  This module generalizes
+the round to that regime while staying a deterministic pure function
+inside jit, so async behavior is replayable and testable bit-for-bit
+(the host-side realization of *when* arrivals happen lives in
+:mod:`repro.fed.broker`; this module owns all the numerics).
+
+THE STALENESS CONTRACT
+======================
+
+Two per-agent state variables ride next to ``(x, z, t)``:
+
+* ``y_tag`` -- the coordinator point agent i's current local work was
+  computed against (the ``y`` it "pulled"; leaves carry the agent axis).
+* ``staleness`` -- ``(N,)`` int32: how many rounds old that work is.
+  ``0`` means the agent starts fresh work this round.
+
+One async round (:func:`async_round_step`):
+
+1. Coordinator edge exactly as the synchronous engine: ``y_r`` and the
+   fresh reflection ``v_r`` from the same
+   :func:`~repro.fed.engine.coordinator_edge` (both backends, both
+   layouts -- the fused uplink kernel path is unchanged).
+2. Training target: fresh agents (``staleness == 0``) take ``v_r`` and
+   record ``y_tag <- y_r``; stale agents keep training against their
+   stale reflection ``2 * y_tag - z`` (``z_i`` is unchanged while an
+   agent is stale, so this reproduces the reflection it originally
+   pulled).  Every agent runs the local solver warm-started at its
+   current ``x`` -- a stale agent therefore accumulates MORE local
+   epochs against the same proximal target, the paper's central lever.
+3. Arrival mask: the Bernoulli participation draw (same key slot as the
+   synchronous round), OR-ed with the hard bound -- an agent whose work
+   is ``max_staleness`` rounds old is FORCED to arrive.  A recorded
+   schedule may be substituted for the draw (``arrival=``), which is
+   how :mod:`repro.fed.broker` replays realized schedules bit-for-bit.
+4. Arrived agents: the synchronous downlink edge applies
+   ``z += 2*damping*(w - y)`` and the selects of ``(x, z)`` with the
+   arrival mask streamed exactly like the participation mask (the fused
+   downlink kernel path is unchanged); arrived agents whose work was
+   STALE are then corrected to use their tagged coordinator point:
+   ``z_i <- z_i + 2*damping*(w_i - y_tag_i)`` -- the increment is
+   applied against the round it was computed in, not the current one.
+5. Non-arrived agents below the bound keep their local progress
+   (``x <- w``) and age (``staleness += 1``).  At ``max_staleness = 0``
+   no stale work may exist, so a miss discards the round's local work
+   -- which is EXACTLY the synchronous engine's inactive-agent
+   semantics.
+
+PARITY CONTRACT: with ``max_staleness = 0`` the async round is BITWISE
+identical to :func:`repro.fed.engine.round_step` /
+:func:`~repro.fed.engine.packed_round_step` per realization, under both
+state layouts, both engine backends, and every registry compressor: the
+key is split the same 3 ways, the arrival draw is the participation
+draw from the same key slot (the forcing term is identically zero when
+``staleness`` is identically zero), and every staleness select reduces
+to an elementwise pass-through of the synchronous values (asserted in
+``tests/test_async_engine.py``).
+
+Privacy: staleness changes the *composition*, not the mechanism -- an
+agent that arrived ``a_i`` times released ``(s+1)`` rounds of local
+epochs per arrival (work discarded at the bound was never transmitted
+and charges nothing).  :func:`effective_counts` derives those per-agent
+effective round counts from a recorded arrival schedule;
+``repro.fed.api.effective_privacy_report`` feeds them to the per-agent
+Prop. 4 accountant.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import compress as compress_lib
+from repro.fed import engine
+from repro.fed.engine import (ASYNC_MODES, ProxH,  # noqa: F401  (re-export)
+                              RoundConfig, SolverAssignment,
+                              StalenessConfig)
+
+tree_map = jax.tree_util.tree_map
+
+
+class AsyncRoundResult(NamedTuple):
+    """:class:`repro.fed.engine.RoundResult` plus the staleness carry."""
+
+    x: Any               # pytree / buffer, agent axis leading
+    z: Any
+    t: Any               # coordinator's copy (== z when uncompressed)
+    y: Any               # coordinator model of THIS round
+    y_tag: Any           # per-agent pulled coordinator point (agent axis)
+    staleness: jnp.ndarray   # (N,) int32 age of each agent's work
+    next_key: jax.Array
+    u: jnp.ndarray       # (N,) realized arrival mask of this round
+    aux: Any
+
+
+# ---------------------------------------------------------------------------
+# State initialization
+# ---------------------------------------------------------------------------
+
+def init_staleness(n_agents: int) -> jnp.ndarray:
+    """Round-0 counters: every agent starts fresh."""
+    return jnp.zeros((n_agents,), jnp.int32)
+
+
+def init_y_tag(z: Any) -> Any:
+    """Round-0 tags: zeros shaped like the agent-stacked state.  The
+    value is never read -- a fresh agent (staleness 0) overwrites its
+    tag with this round's ``y`` before anything consumes it."""
+    return tree_map(jnp.zeros_like, z)
+
+
+# ---------------------------------------------------------------------------
+# Round pieces
+# ---------------------------------------------------------------------------
+
+def _vec(mask: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape an (N,) mask for broadcast against an agent-axis leaf."""
+    return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def _select(mask: jnp.ndarray, new: Any, old: Any) -> Any:
+    """``jnp.where`` on trees with an (N,) bool mask (NaN-safe select,
+    same semantics as :func:`repro.fed.engine.masked_mix`)."""
+    return tree_map(lambda nl, ol: jnp.where(_vec(mask, nl), nl, ol),
+                    new, old)
+
+
+def forced_arrivals(staleness: jnp.ndarray, max_staleness: int) \
+        -> jnp.ndarray:
+    """The hard bound: an agent holding work ``max_staleness`` rounds
+    old must arrive.  Fresh agents (staleness 0) are never forced --
+    at K = 0 a miss discards instead (the synchronous semantics), so
+    the forcing term is identically zero there and the arrival mask is
+    the participation draw bit-for-bit."""
+    return (staleness >= max_staleness) & (staleness > 0)
+
+
+def arrival_mask(key: jax.Array, cfg: RoundConfig,
+                 staleness: jnp.ndarray,
+                 arrival: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The round's realized (N,) float arrival mask: the Bernoulli
+    participation draw (or an externally realized schedule row --
+    broker runs and replays) OR-ed with the forced arrivals."""
+    if arrival is None:
+        draw = engine.participation_mask(key, cfg)
+    else:
+        draw = jnp.asarray(arrival, jnp.float32).reshape(-1)
+    forced = forced_arrivals(staleness, cfg.staleness.max_staleness)
+    return jnp.maximum(draw, forced.astype(jnp.float32))
+
+
+def _advance_staleness(staleness: jnp.ndarray, u: jnp.ndarray,
+                       max_staleness: int) -> jnp.ndarray:
+    """Arrivals reset to 0; pending work below the bound ages by one;
+    a miss AT the bound (only reachable at K = 0, where the bound
+    forces every stale agent in) stays -- its work was discarded."""
+    aged = jnp.where(staleness < max_staleness, staleness + 1, staleness)
+    return jnp.where(u != 0, jnp.zeros_like(staleness), aged)
+
+
+# ---------------------------------------------------------------------------
+# One async round, tree layout
+# ---------------------------------------------------------------------------
+
+def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
+                     y_tag: Any, staleness: jnp.ndarray, key: jax.Array,
+                     local_solver: SolverAssignment,
+                     prox_h: ProxH = None,
+                     arrival: Optional[jnp.ndarray] = None) \
+        -> AsyncRoundResult:
+    """One bounded-staleness round on agent-stacked pytrees (module
+    contract above).  Mirrors :func:`repro.fed.engine.round_step`'s key
+    schedule and edge formulas exactly; ``arrival`` optionally replaces
+    the Bernoulli draw with a realized schedule row (broker replay)."""
+    key, k_part, k_solve = jax.random.split(key, 3)
+
+    # -- coordinator edge: identical to the synchronous round -----------
+    z_seen = t if cfg.compressed else z
+    y, v_fresh = engine.coordinator_edge(cfg, z, z_seen, prox_h)
+
+    # -- training targets: fresh agents pull this round's reflection,
+    # stale agents reproduce the one they pulled (z_i unchanged while
+    # stale, so 2*y_tag - z IS that reflection) -------------------------
+    fresh = staleness == 0
+    v_stale = tree_map(lambda ytl, zl: 2.0 * ytl - zl, y_tag, z)
+    v_eff = _select(fresh, v_fresh, v_stale)
+    y_tag_new = tree_map(
+        lambda yl, ytl: jnp.where(_vec(fresh, ytl), yl[None], ytl),
+        y, y_tag)
+
+    # -- every agent trains, warm-started at its current x --------------
+    w, aux = engine.run_solvers(local_solver, x, v_eff, k_solve,
+                                cfg.n_agents)
+
+    # -- arrivals: the participation draw + the hard staleness bound ----
+    u = arrival_mask(k_part, cfg, staleness, arrival)
+
+    # -- synchronous downlink edge with the arrival mask streamed like
+    # the participation mask (fused kernel path unchanged) --------------
+    x_upd, z_upd = engine.agent_edge(cfg, u, w, x, z, y, z_seen, prox_h)
+
+    # -- stale arrivals: the increment is tagged with the coordinator
+    # point it was computed against, not this round's -------------------
+    arrived = u != 0
+    stale_arrival = arrived & (~fresh)
+    z_tagged = tree_map(
+        lambda zl, wl, ytl: zl + 2.0 * cfg.damping * (wl - ytl),
+        z, w, y_tag)
+    z_new = _select(stale_arrival, z_tagged, z_upd)
+
+    # -- stragglers below the bound keep their local progress -----------
+    keep = (~arrived) & (staleness < cfg.staleness.max_staleness)
+    x_new = _select(keep, w, x_upd)
+
+    s_new = _advance_staleness(staleness, u, cfg.staleness.max_staleness)
+
+    # -- compressed uplink: only arrived increments are transmitted -----
+    if cfg.compressed:
+        q = engine.compress_increment(
+            tree_map(jnp.subtract, z_new, t), cfg)
+        t_new = tree_map(
+            lambda tl, ql: tl + _vec(u.astype(ql.dtype), ql) * ql, t, q)
+    else:
+        t_new = z_new
+
+    return AsyncRoundResult(x=x_new, z=z_new, t=t_new, y=y,
+                            y_tag=y_tag_new, staleness=s_new,
+                            next_key=key, u=u, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# One async round, packed-resident layout
+# ---------------------------------------------------------------------------
+
+def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
+                            z: jnp.ndarray, t: jnp.ndarray,
+                            y_tag: jnp.ndarray, staleness: jnp.ndarray,
+                            key: jax.Array,
+                            local_solver: SolverAssignment,
+                            prox_h: ProxH = None,
+                            arrival: Optional[jnp.ndarray] = None) \
+        -> AsyncRoundResult:
+    """:func:`async_round_step` on the RESIDENT ``(N, width)`` buffers
+    (engine layout contract): ``y_tag`` is an ``(N, width)`` buffer and
+    ``y`` comes back ``(1, width)``.  Same arithmetic per column, so
+    packed async trajectories are bitwise identical to the tree path
+    per realization, exactly like the synchronous engine."""
+    key, k_part, k_solve = jax.random.split(key, 3)
+
+    z_seen = t if cfg.compressed else z
+    y, v_fresh = engine.coordinator_edge_packed(cfg, z, z_seen, meta,
+                                                prox_h)
+
+    fresh_col = (staleness == 0).reshape(-1, 1)
+    v_eff = jnp.where(fresh_col, v_fresh, 2.0 * y_tag - z)
+    y_tag_new = jnp.where(fresh_col, y, y_tag)   # (1, w) broadcasts
+
+    w, aux = engine.run_solvers(local_solver, x, v_eff, k_solve,
+                                cfg.n_agents)
+
+    u = arrival_mask(k_part, cfg, staleness, arrival)
+
+    x_upd, z_upd = engine.agent_edge_packed(cfg, u, w, x, z, y, z_seen,
+                                            prox_h)
+
+    arrived = u != 0
+    stale_arrival = (arrived & ~fresh_col.reshape(-1)).reshape(-1, 1)
+    z_tagged = z + 2.0 * cfg.damping * (w - y_tag)
+    z_new = jnp.where(stale_arrival, z_tagged, z_upd)
+
+    keep = ((~arrived)
+            & (staleness < cfg.staleness.max_staleness)).reshape(-1, 1)
+    x_new = jnp.where(keep, w, x_upd)
+
+    s_new = _advance_staleness(staleness, u, cfg.staleness.max_staleness)
+
+    if cfg.compressed:
+        q = compress_lib.compress_increment_packed(z_new - t, meta, cfg)
+        t_new = t + u.astype(q.dtype).reshape(-1, 1) * q
+    else:
+        t_new = z_new
+
+    return AsyncRoundResult(x=x_new, z=z_new, t=t_new, y=y,
+                            y_tag=y_tag_new, staleness=s_new,
+                            next_key=key, u=u, aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# Schedule analysis: the staleness semantics replayed on the host, for
+# privacy composition (and broker-schedule validation)
+# ---------------------------------------------------------------------------
+
+def effective_counts(schedule, max_staleness: int) \
+        -> Tuple[np.ndarray, np.ndarray]:
+    """Per-agent effective composition of a realized arrival schedule.
+
+    ``schedule`` is the ``(R, N)`` 0/1 arrival record (one row per
+    round, e.g. stacked ``AsyncRoundResult.u``).  Returns
+    ``(arrivals, released_rounds)`` int64 ``(N,)`` vectors:
+
+    * ``arrivals[i]`` -- how many increments agent i released (its
+      effective participation count);
+    * ``released_rounds[i]`` -- how many ROUNDS of local training those
+      increments carried (an increment ``s`` rounds stale carries
+      ``s + 1`` rounds of epochs).  Work discarded at the K = 0 bound
+      was never transmitted and charges nothing -- DP composes over
+      released information only.
+
+    This replays :func:`_advance_staleness` on the host, so the counts
+    agree with what the in-jit model realized."""
+    sched = np.asarray(schedule)
+    if sched.ndim != 2:
+        raise ValueError(f"schedule must be (n_rounds, n_agents), got "
+                         f"shape {sched.shape}")
+    r_rounds, n = sched.shape
+    s = np.zeros(n, np.int64)
+    arrivals = np.zeros(n, np.int64)
+    released = np.zeros(n, np.int64)
+    for r in range(r_rounds):
+        u = sched[r] != 0
+        arrivals += u
+        released += np.where(u, s + 1, 0)
+        s = np.where(u, 0,
+                     np.where(s < max_staleness, s + 1, s))
+    return arrivals, released
+
+
+def validate_schedule(schedule, max_staleness: int) -> None:
+    """Raise ValueError when a schedule violates the hard bound: an
+    agent may never hold work more than ``max_staleness`` rounds old
+    when increments are pending (the in-jit model would force such an
+    arrival; a recorded schedule claiming otherwise is corrupt)."""
+    sched = np.asarray(schedule)
+    if sched.ndim != 2:
+        raise ValueError(f"schedule must be (n_rounds, n_agents), got "
+                         f"shape {sched.shape}")
+    n = sched.shape[1]
+    s = np.zeros(n, np.int64)
+    for r, row in enumerate(sched):
+        u = row != 0
+        over = (~u) & (s >= max_staleness) & (s > 0)
+        if over.any():
+            raise ValueError(
+                f"schedule violates max_staleness={max_staleness}: "
+                f"agents {np.nonzero(over)[0].tolist()} miss round {r} "
+                f"while holding work {int(s[over].max())} rounds old")
+        s = np.where(u, 0, np.where(s < max_staleness, s + 1, s))

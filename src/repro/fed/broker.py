@@ -1,0 +1,233 @@
+"""Host-side bounded-staleness broker: Layer 2 of the async subsystem.
+
+:mod:`repro.fed.async_engine` models staleness as a deterministic pure
+function inside jit -- given an arrival schedule, the numerics are
+fixed.  This module supplies the *scheduler*: agent workers running on
+threads, a bounded-staleness increment buffer between them and the
+coordinator, and a round loop that drains the buffer, realizes which
+agents arrive when, and feeds each realized arrival row to the in-jit
+model.  The division of labor is strict:
+
+* the broker decides only TIMING (who arrives at which round gate);
+* every number flows through the in-jit model via the ``arrival=``
+  override -- the broker never touches state.
+
+Because of that split, a broker run is replayable bit-for-bit: record
+its :class:`ArrivalSchedule`, then push the same rows through the same
+in-jit step from the same init (:func:`replay`) -- asserted in
+``tests/test_async_engine.py``.
+
+ROUND PROTOCOL (:meth:`IncrementBroker.run`):
+
+1. Every fresh agent (no pending work) is dispatched this round's
+   assignment; its worker thread "trains" for its simulated latency and
+   submits the increment to the buffer.
+2. At the round gate the coordinator BLOCKS on must-arrive agents --
+   those whose pending work is ``max_staleness`` rounds old (with
+   ``max_staleness = 0`` that is every dispatched agent: the broker
+   degenerates to the synchronous barrier).
+3. It then grace-drains the buffer: increments that happen to be ready
+   arrive too; everyone else ages one round.
+4. The realized 0/1 row is fed to ``round_fn(state, row)`` -- the
+   in-jit async round -- and recorded.
+
+The recorded schedule always satisfies the staleness bound by
+construction (validated on exit against
+:func:`repro.fed.async_engine.validate_schedule`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.fed import async_engine
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSchedule:
+    """A realized async run: one 0/1 row per round, one column per
+    agent, plus the staleness bound it was realized under."""
+
+    arrivals: np.ndarray        # (n_rounds, n_agents) float32 in {0, 1}
+    max_staleness: int
+
+    def __post_init__(self):
+        arr = np.asarray(self.arrivals, np.float32)
+        if arr.ndim != 2:
+            raise ValueError(f"arrivals must be (n_rounds, n_agents), "
+                             f"got shape {arr.shape}")
+        object.__setattr__(self, "arrivals", arr)
+
+    @property
+    def n_rounds(self) -> int:
+        return self.arrivals.shape[0]
+
+    @property
+    def n_agents(self) -> int:
+        return self.arrivals.shape[1]
+
+    def validate(self) -> "ArrivalSchedule":
+        """Raise ValueError if any agent's pending work outlives the
+        bound; returns self for chaining."""
+        async_engine.validate_schedule(self.arrivals, self.max_staleness)
+        return self
+
+    def effective_counts(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-agent ``(arrivals, released_rounds)`` -- the composition
+        inputs of the stale-aware privacy report (see
+        :func:`repro.fed.async_engine.effective_counts`)."""
+        return async_engine.effective_counts(self.arrivals,
+                                             self.max_staleness)
+
+    # -- persistence (json keeps schedules diffable and dependency-free)
+    def save(self, path) -> None:
+        with open(path, "w") as fh:
+            json.dump({"max_staleness": int(self.max_staleness),
+                       "arrivals": self.arrivals.astype(int).tolist()},
+                      fh)
+
+    @staticmethod
+    def load(path) -> "ArrivalSchedule":
+        with open(path) as fh:
+            d = json.load(fh)
+        return ArrivalSchedule(
+            arrivals=np.asarray(d["arrivals"], np.float32),
+            max_staleness=int(d["max_staleness"]))
+
+
+class AgentWorker(threading.Thread):
+    """One agent's training loop on its own thread.
+
+    The worker consumes round assignments from its inbox, simulates the
+    local solve for ``latency_fn(agent, round) -> seconds`` of wall
+    time, and submits ``(agent, round)`` to the broker's buffer.  The
+    actual solver runs inside the coordinator's jitted round (the
+    numerics split above) -- the thread realizes only the *duration*."""
+
+    def __init__(self, agent: int,
+                 latency_fn: Callable[[int, int], float],
+                 buffer: "queue.Queue"):
+        super().__init__(daemon=True, name=f"fed-agent-{agent}")
+        self.agent = agent
+        self._latency_fn = latency_fn
+        self._buffer = buffer
+        self.inbox: "queue.Queue" = queue.Queue()
+
+    def run(self) -> None:
+        while True:
+            item = self.inbox.get()
+            if item is None:            # shutdown sentinel
+                return
+            round_idx = item
+            delay = float(self._latency_fn(self.agent, round_idx))
+            if delay > 0.0:
+                time.sleep(delay)
+            self._buffer.put((self.agent, round_idx))
+
+
+class IncrementBroker:
+    """Bounded-staleness buffer + round-gate coordinator driver.
+
+    ``latency_fn(agent, round) -> seconds`` shapes the traffic (default:
+    a deterministic pseudo-random few-millisecond jitter so runs finish
+    fast but schedules are nontrivial).  Straggler fleets are one
+    lambda away -- see ``examples/async_training.py``.
+    """
+
+    def __init__(self, n_agents: int, max_staleness: int,
+                 latency_fn: Optional[Callable[[int, int], float]] = None,
+                 grace: float = 0.0, seed: int = 0):
+        if n_agents < 1:
+            raise ValueError("n_agents must be >= 1")
+        if max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        self.n_agents = n_agents
+        self.max_staleness = max_staleness
+        self.grace = float(grace)
+        if latency_fn is None:
+            rng = np.random.default_rng(seed)
+            # pre-drawn jitter table keeps the default deterministic per
+            # seed without sharing an rng across threads
+            table = rng.uniform(0.0, 0.004, size=(n_agents, 64))
+            latency_fn = lambda a, r: float(table[a, r % 64])  # noqa: E731
+        self._latency_fn = latency_fn
+        self._buffer: "queue.Queue" = queue.Queue()
+
+    # ------------------------------------------------------------------
+    def run(self, round_fn: Callable[[Any, np.ndarray], Any], state: Any,
+            n_rounds: int) -> Tuple[Any, ArrivalSchedule]:
+        """Drive ``n_rounds`` async rounds; returns
+        ``(final_state, schedule)``.
+
+        ``round_fn(state, arrival_row) -> state`` is the in-jit numerics
+        -- e.g. ``lambda s, u: algo.round_with_arrival(s, u)[0]`` on the
+        dense front end, or a model-scale closure over
+        ``trainer.step(..., arrival=u)``."""
+        K = self.max_staleness
+        workers = [AgentWorker(a, self._latency_fn, self._buffer)
+                   for a in range(self.n_agents)]
+        for w in workers:
+            w.start()
+        pending_age = np.full(self.n_agents, -1, np.int64)  # -1 = fresh
+        ready = np.zeros(self.n_agents, bool)   # submitted, not applied
+        rows: List[np.ndarray] = []
+        try:
+            for r in range(n_rounds):
+                # 1. dispatch this round's work to every fresh agent
+                for a in range(self.n_agents):
+                    if pending_age[a] < 0:
+                        workers[a].inbox.put(r)
+                        pending_age[a] = 0
+
+                # 2. block on must-arrive agents (work K rounds old);
+                # K = 0 blocks on every dispatched agent -- the
+                # synchronous barrier
+                must = (pending_age >= K) & ~ready
+                while must.any():
+                    agent, _ = self._buffer.get()
+                    ready[agent] = True
+                    must[agent] = False
+
+                # 3. grace-drain whatever else is already in the buffer
+                deadline = time.monotonic() + self.grace
+                while True:
+                    try:
+                        timeout = deadline - time.monotonic()
+                        agent, _ = self._buffer.get(
+                            timeout=max(timeout, 0.0))
+                        ready[agent] = True
+                    except queue.Empty:
+                        break
+
+                # 4. realize the row, feed the in-jit model, age misses
+                u = ready.astype(np.float32)
+                rows.append(u)
+                state = round_fn(state, u)
+                pending_age[ready] = -1
+                pending_age[pending_age >= 0] += 1
+                ready[:] = False
+        finally:
+            for w in workers:
+                w.inbox.put(None)
+            for w in workers:
+                w.join(timeout=5.0)
+        schedule = ArrivalSchedule(arrivals=np.stack(rows),
+                                   max_staleness=K).validate()
+        return state, schedule
+
+
+def replay(round_fn: Callable[[Any, np.ndarray], Any], state: Any,
+           schedule: ArrivalSchedule) -> Any:
+    """Push a recorded schedule's rows through the in-jit model from
+    ``state``; with the same init this reproduces the broker run's
+    trajectory bit-for-bit (the broker only ever chose the rows)."""
+    for row in np.asarray(schedule.arrivals, np.float32):
+        state = round_fn(state, row)
+    return state

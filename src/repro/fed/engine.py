@@ -115,6 +115,83 @@ ENGINE_BACKENDS = ("xla", "pallas")
 # buffer per state variable + a static PackedMeta
 ENGINE_LAYOUTS = ("tree", "packed")
 
+# round synchrony modes: "off" = the bulk-synchronous round above;
+# "stale" = the bounded-staleness async model (arrival mask + per-agent
+# staleness counters; semantics in repro.fed.async_engine)
+ASYNC_MODES = ("off", "stale")
+
+
+def _numeric_scalar(name: str, value):
+    """Normalize a config scalar to ``float`` with a clear construction
+    error: strings (which ``float()`` would happily parse -- hiding the
+    type bug until deep inside jit) and non-numerics raise ValueError;
+    0-d numpy/jax arrays are accepted and unwrapped."""
+    if isinstance(value, (str, bytes)):
+        raise ValueError(
+            f"{name} must be a number, got the string {value!r}")
+    if getattr(value, "ndim", None) == 0:   # 0-d numpy/jax scalar
+        return float(value)
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{name} must be a number, got {value!r}") from None
+
+
+def _int_scalar(name: str, value) -> int:
+    """Like :func:`_numeric_scalar` but for integer knobs: accepts ints
+    and 0-d integer arrays, rejects strings, floats with a fractional
+    part, and non-numerics -- at construction, not inside jit."""
+    if isinstance(value, (str, bytes)):
+        raise ValueError(
+            f"{name} must be an integer, got the string {value!r}")
+    if isinstance(value, bool):
+        raise ValueError(f"{name} must be an integer, got {value!r}")
+    if getattr(value, "ndim", None) == 0:
+        value = value.item()
+    try:
+        as_int = int(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{name} must be an integer, got {value!r}") from None
+    if as_int != value:
+        raise ValueError(f"{name} must be an integer, got {value!r}")
+    return as_int
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """Bounded-staleness async-round knobs (ROADMAP item 3).
+
+    ``mode="stale"`` turns the round's Bernoulli participation draw into
+    an *arrival* draw: agents that arrive submit their increment (tagged
+    with the coordinator point it was computed against) and pull a fresh
+    reflection next round; agents that do not arrive KEEP TRAINING
+    against their stale reflection, aging a per-agent staleness counter.
+    ``max_staleness`` is the hard bound K: an agent holding work K
+    rounds old is forced to arrive.  K = 0 permits no stale work at all
+    -- a miss discards the round's local work, which is exactly the
+    synchronous engine (bitwise per realization; contract in
+    :mod:`repro.fed.async_engine`).
+    """
+
+    mode: str = "off"            # "off" | "stale"
+    max_staleness: int = 0       # K: forced arrival at staleness K
+
+    def __post_init__(self):
+        if self.mode not in ASYNC_MODES:
+            raise ValueError(
+                f"unknown async mode {self.mode!r}; "
+                f"known: {', '.join(ASYNC_MODES)}")
+        k = _int_scalar("max_staleness", self.max_staleness)
+        if k < 0:
+            raise ValueError(f"max_staleness must be >= 0, got {k}")
+        object.__setattr__(self, "max_staleness", k)
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
 # (x_stack, v_stack, key) -> (w_stack, aux); aux may be None.  The solver
 # must be warm-started at x_stack (Section V-C1) -- the engine passes the
 # previous local states as the first argument.
@@ -182,6 +259,12 @@ class RoundConfig:
     # in the module docstring; front ends dispatch on this to
     # packed_round_step and convert at the API boundary only)
     state_layout: str = "tree"
+    # bounded-staleness async rounds: mode "off" keeps this config a
+    # synchronous round; "stale" generalizes the participation draw to
+    # an arrival mask with per-agent staleness counters (front ends
+    # dispatch to repro.fed.async_engine when enabled)
+    staleness: StalenessConfig = dataclasses.field(
+        default_factory=StalenessConfig)
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
@@ -197,6 +280,19 @@ class RoundConfig:
             raise ValueError(
                 f"unknown state layout {self.state_layout!r}; "
                 f"known: {', '.join(ENGINE_LAYOUTS)}")
+        # damping gets the same construction-time screening as
+        # participation below: a string "0.5" parses as a valid float,
+        # so without this it would only blow up (or worse, silently
+        # trace) deep inside the jitted round
+        object.__setattr__(self, "damping",
+                           _numeric_scalar("damping", self.damping))
+        object.__setattr__(self, "rho", _numeric_scalar("rho", self.rho))
+        if self.staleness is None:
+            object.__setattr__(self, "staleness", StalenessConfig())
+        elif not isinstance(self.staleness, StalenessConfig):
+            raise ValueError(
+                f"staleness must be a StalenessConfig, got "
+                f"{self.staleness!r}")
         p = self.participation
         if isinstance(p, (str, bytes)):
             # a string is a __len__-bearing sequence of characters:

@@ -53,6 +53,11 @@ class FedState(NamedTuple):
     # coordinator's copy of z -- only materialized when the z-exchange is
     # compressed (None otherwise: at model scale t doubles state memory)
     t: Any = None
+    # bounded-staleness async rounds only (None when synchronous): the
+    # per-agent pulled coordinator point and staleness counters carried
+    # by repro.fed.async_engine
+    y_tag: Any = None
+    staleness: Any = None   # (A,) int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +91,8 @@ class FedConfig:
     engine_backend: str = "xla"      # round edges: "xla" | "pallas" fused
     state_layout: str = "tree"       # "tree" | "packed" resident buffer
     damping: float = 1.0             # Krasnosel'skii relaxation
+    async_mode: str = "off"          # "off" | "stale" bounded staleness
+    max_staleness: int = 0           # K: forced arrival bound
 
     def to_spec(self) -> FedSpec:
         from repro.fed.api import CompressionSpec, PrivacySpec
@@ -103,7 +110,9 @@ class FedConfig:
                                         backend=self.compress_backend),
             engine_backend=self.engine_backend,
             state_layout=self.state_layout,
-            use_pallas=self.use_pallas_update)
+            use_pallas=self.use_pallas_update,
+            async_mode=self.async_mode,
+            max_staleness=self.max_staleness)
 
 
 def packed_layout(model: Model, fcfg):
@@ -136,8 +145,13 @@ def init_state(model: Model, key: jax.Array, fcfg) -> FedState:
 
         stacked = pack_leaves(stacked)[0]
     t = stacked if spec.compression.name != "none" else None
+    stale = spec.staleness_config().enabled
     return FedState(x=stacked, z=stacked, step=jnp.zeros((), jnp.int32),
-                    t=t)
+                    t=t,
+                    y_tag=(jax.tree_util.tree_map(jnp.zeros_like, stacked)
+                           if stale else None),
+                    staleness=(jnp.zeros((spec.n_agents,), jnp.int32)
+                               if stale else None))
 
 
 def _coordinator_prox(zbar, fcfg):
@@ -187,7 +201,7 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
 
     grad_fn = jax.value_and_grad(per_agent_loss)
 
-    def train_step(state: FedState, batch, key: jax.Array):
+    def train_step(state: FedState, batch, key: jax.Array, arrival=None):
         rkey = jax.random.fold_in(key, state.step)
 
         def fgrad_for(batch_slice):
@@ -216,7 +230,24 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
             local_solver = tuple(local_solver)
 
         t = state.t if ecfg.compressed else state.z
-        if meta is not None:
+        if ecfg.staleness.enabled:
+            from repro.fed import async_engine
+
+            if meta is not None:
+                res = async_engine.packed_async_round_step(
+                    ecfg, meta, state.x, state.z, t, state.y_tag,
+                    state.staleness, rkey, local_solver, prox_h=prox_h,
+                    arrival=arrival)
+            else:
+                res = async_engine.async_round_step(
+                    ecfg, state.x, state.z, t, state.y_tag,
+                    state.staleness, rkey, local_solver, prox_h=prox_h,
+                    arrival=arrival)
+        elif arrival is not None:
+            raise ValueError("arrival schedules require async_mode="
+                             "'stale' (synchronous rounds draw "
+                             "participation internally)")
+        elif meta is not None:
             res = engine.packed_round_step(ecfg, meta, state.x, state.z,
                                            t, rkey, local_solver,
                                            prox_h=prox_h)
@@ -239,8 +270,19 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
             "loss": loss,
             "participation": jnp.mean(res.u.astype(jnp.float32)),
         }
-        new_state = FedState(x=res.x, z=res.z, step=state.step + 1,
-                             t=res.t if ecfg.compressed else None)
+        if ecfg.staleness.enabled:
+            # the realized (A,) arrival row -- stack over rounds to get
+            # the schedule effective_privacy_report composes over
+            metrics["arrivals"] = res.u
+            metrics["staleness"] = jnp.mean(
+                res.staleness.astype(jnp.float32))
+            new_state = FedState(x=res.x, z=res.z, step=state.step + 1,
+                                 t=res.t if ecfg.compressed else None,
+                                 y_tag=res.y_tag,
+                                 staleness=res.staleness)
+        else:
+            new_state = FedState(x=res.x, z=res.z, step=state.step + 1,
+                                 t=res.t if ecfg.compressed else None)
         return new_state, metrics
 
     return train_step

@@ -17,6 +17,7 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
@@ -83,15 +84,37 @@ def main():
                           f"eps_i={a.adp_eps:.3f} "
                           f"(ceiling {a.eps_ceiling:.3f})")
         state = trainer.init(key)
+        stale = spec.async_mode != "off"
+        arrival_rows = []   # realized (N,) rows -> the run's schedule
         for i in range(args.steps):
             batch = make_batch_for(cfg, shape, jax.random.fold_in(key, i),
                                    n_agents=spec.n_agents)
             t0 = time.time()
             state, metrics = trainer.step(state, batch,
                                           jax.random.fold_in(key, i))
+            extra = ""
+            if stale:
+                arrival_rows.append(np.asarray(metrics["arrivals"]))
+                extra = f" stale={float(metrics['staleness']):.2f}"
             print(f"round {i:4d} loss={float(metrics['loss']):.4f} "
-                  f"part={float(metrics['participation']):.2f} "
+                  f"part={float(metrics['participation']):.2f}{extra} "
                   f"dt={time.time() - t0:.2f}s")
+        if stale and spec.privacy.tau > 0 and arrival_rows:
+            # the nominal table above charged every agent the full K
+            # rounds; recompose over the REALIZED arrival schedule --
+            # each agent over the rounds of local work it released
+            q = args.local_dataset_size or max(1, args.batch
+                                               // spec.n_agents)
+            rep = api.effective_privacy_report(
+                spec, np.stack(arrival_rows), q)
+            print(f"effective privacy (realized arrival schedule, "
+                  f"max_staleness={spec.max_staleness}): "
+                  f"({rep.adp_eps:.3f}, {rep.adp_delta:.0e})-ADP")
+            for a in rep.per_agent:
+                print(f"  agent {a.agent:3d}: arrivals={a.arrivals} "
+                      f"released_rounds={a.K}/{rep.K} "
+                      f"eps_i={a.adp_eps:.3f} "
+                      f"(ceiling {a.eps_ceiling:.3f})")
         final = trainer.consensus(state)
     else:
         params = model.init(key)
