@@ -291,6 +291,100 @@ def _async_rounds(quick):
     return rows, payload
 
 
+def _sharded(quick):
+    """Weak scaling of the mesh-sharded packed round (ROADMAP item 2).
+
+    One engine-scale packed round (elementwise oracle, pallas edges)
+    per (devices, N) point at a fixed 512 agents PER SHARD: N=512 on 1
+    device up to N=4096 on 8, plus the N=64 single-device baseline.
+    Points needing more devices than are visible are skipped (the
+    committed rows come from an
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` run).  On
+    this single-core CPU container the host devices time-share one
+    core, so ms/round GROWS with N here -- the weak-scaling flatness
+    claim is about real multi-chip meshes; these rows pin the
+    correctness path and the per-shard launch structure (exactly TWO
+    fused edge launches per shard, asserted by the CI sharded smoke
+    from the ``launches_per_shard`` field)."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.core.solvers import SolverConfig
+    from repro.fed import compress as compress_lib
+    from repro.fed.solvers import make_packed_local_solver
+
+    iters = 2 if quick else 8
+    widths = EDGE_WIDTHS[:16]
+
+    def fgrad(w, k):
+        return jax.tree_util.tree_map(lambda l: 0.1 * l, w)
+
+    scfg = SolverConfig(name="gd", n_epochs=2, step_size=0.1)
+    n_dev = len(jax.devices())
+    rows, payload = [], []
+
+    # per-shard launch structure: TPU-shaped (interpret=False) trace of
+    # the sharded edges -- the partial-sum uplink + presummed downlink
+    mesh1 = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                 ("agent", "model"))
+    zt = jnp.zeros((8, 1024))
+
+    def tpu_sharded_edges(x_, w_, z_, u_):
+        y, v = edge_ops.round_uplink_sharded(z_, mesh=mesh1, n_total=8,
+                                             rho_eff=0.125,
+                                             interpret=False)
+        xn, zn = edge_ops.round_downlink_sharded(x_, w_, z_, y, u_,
+                                                 mesh=mesh1, damping=0.5,
+                                                 interpret=False)
+        return v, xn, zn
+
+    launches = _count_prims(
+        jax.make_jaxpr(tpu_sharded_edges)(zt, zt, zt,
+                                          jnp.zeros((8,))).jaxpr,
+        "pallas_call")
+    rows.append(f"engine,sharded:structure,launches_per_shard={launches}")
+    payload.append(dict(kind="sharded_structure",
+                        launches_per_shard=launches))
+
+    cases = [(64, 1)] + [(512 * d, d) for d in (1, 2, 4, 8)]
+    ms0 = None
+    for n, d in cases:
+        name = f"n{n}_d{d}"
+        if d > n_dev:
+            rows.append(f"engine,sharded:{name},skipped,needs {d} devices")
+            continue
+        mesh = Mesh(np.asarray(jax.devices()[:d]).reshape(d, 1),
+                    ("agent", "model"))
+        tree = {f"l{i}": jnp.ones((n, w)) for i, w in enumerate(widths)}
+        meta = compress_lib.packed_meta(tree)
+        buf = jax.device_put(
+            compress_lib.pack_leaves(tree)[0],
+            NamedSharding(mesh, P("agent", None)))
+        del tree
+        solver = make_packed_local_solver(scfg, fgrad, 1.0, 0.1, 1.0,
+                                          meta=meta)
+        cfg = engine.RoundConfig(n_agents=n, participation=0.9,
+                                 damping=0.5, state_layout="packed",
+                                 engine_backend="pallas", agent_shards=d)
+        f = jax.jit(lambda x, z, t, k, cfg=cfg, meta=meta,
+                    solver=solver, mesh=mesh:
+                    engine.packed_round_step(cfg, meta, x, z, t, k,
+                                             solver, mesh=mesh))
+        ms = _best_ms(f, (buf, buf, buf, jax.random.PRNGKey(0)), iters,
+                      reps=2)
+        if ms0 is None:
+            ms0 = ms
+        rows.append(f"engine,sharded:{name},{ms:.2f},{ms / ms0:.2f}x,"
+                    f"N={n};devices={d};m={int(meta.m_total)}")
+        payload.append(dict(kind="sharded_round", case=name, n_agents=n,
+                            devices=d, ms_per_round=ms,
+                            rel_to_first=ms / ms0,
+                            per_shard_rows=n // d,
+                            launches_per_shard=launches,
+                            m_total=int(meta.m_total)))
+    return rows, payload
+
+
 def _edge_trees():
     key = jax.random.PRNGKey(0)
     tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
@@ -450,12 +544,13 @@ def run(quick=True):
     round_rows, round_payload = _rounds(quick)
     struct_rows, struct_payload = _round_structure()
     async_rows, async_payload = _async_rounds(quick)
+    sharded_rows, sharded_payload = _sharded(quick)
     edge_rows, edge_payload = _round_edge(quick)
     payload = {"cases": (round_payload + struct_payload + async_payload
-                         + edge_payload),
+                         + sharded_payload + edge_payload),
                "quick": bool(quick)}
-    return (round_rows + struct_rows + async_rows + edge_rows,
-            payload)
+    return (round_rows + struct_rows + async_rows + sharded_rows
+            + edge_rows, payload)
 
 
 if __name__ == "__main__":

@@ -122,12 +122,18 @@ class FedPLT:
     -- reproduces the homogeneous trajectory bit-for-bit.
 
     ``participation`` optionally overrides ``config.participation`` with
-    a per-agent ``(N,)`` tuple of Bernoulli rates."""
+    a per-agent ``(N,)`` tuple of Bernoulli rates.
+
+    ``mesh`` (an ``(agent, model)`` :class:`jax.sharding.Mesh`, e.g.
+    from :meth:`repro.fed.api.FedSpec.build_mesh`) shards the agent
+    axis of every round across the mesh per the engine's mesh contract;
+    a 1-device mesh reproduces the unsharded trajectory bitwise."""
 
     def __init__(self, problem, config: FedPLTConfig, prox_h=None,
-                 solver_groups=None, participation=None):
+                 solver_groups=None, participation=None, mesh=None):
         self.problem = problem
         self.cfg = config
+        self.mesh = mesh
         self.mu = config.mu if config.mu is not None else problem.strong_convexity()
         self.L = config.L if config.L is not None else problem.smoothness()
         if self.mu <= 0:  # nonconvex / merely-convex: fall back to 1/rho curvature
@@ -155,7 +161,8 @@ class FedPLT:
             state_layout=config.state_layout,
             staleness=engine.StalenessConfig(
                 mode=config.async_mode,
-                max_staleness=config.max_staleness))
+                max_staleness=config.max_staleness),
+            agent_shards=engine.mesh_agent_shards(mesh))
         # packed layout: the dense state is single-leaf, so its resident
         # (N, n) buffer IS the stacked array (pack_leaves fast path, no
         # lane padding) -- the meta is pure shape arithmetic and the
@@ -284,7 +291,7 @@ class FedPLT:
             res = step(self._ecfg, *extra, state.x, state.z, t,
                        state.y_tag, state.staleness, state.key,
                        self._solvers, prox_h=self.prox_h,
-                       arrival=arrival)
+                       arrival=arrival, mesh=self.mesh)
             y = res.y.reshape(-1) if self._meta is not None else res.y
             return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
                                k=state.k + 1,
@@ -298,12 +305,12 @@ class FedPLT:
         if self._meta is not None:
             res = engine.packed_round_step(
                 self._ecfg, self._meta, state.x, state.z, t, state.key,
-                self._solvers, prox_h=self.prox_h)
+                self._solvers, prox_h=self.prox_h, mesh=self.mesh)
             y = res.y.reshape(-1)   # (1, n) coordinator buffer -> (n,)
         else:
             res = engine.round_step(self._ecfg, state.x, state.z, t,
                                     state.key, self._solvers,
-                                    prox_h=self.prox_h)
+                                    prox_h=self.prox_h, mesh=self.mesh)
             y = res.y
         return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
                            k=state.k + 1,

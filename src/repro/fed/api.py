@@ -272,6 +272,20 @@ class FedSpec:
         flag="--max-staleness", arg_type=int,
         help="staleness bound K: an agent holding K-round-old work is "
              "forced to arrive (0 = synchronous semantics)"))
+    # sharded rounds (engine mesh contract): shard the agent axis of
+    # every per-agent carrier across this many devices.  1 = unsharded;
+    # a 1-device mesh reproduces the unsharded trajectory bitwise.
+    agent_shards: int = dataclasses.field(default=1, metadata=_cli(
+        flag="--agent-shards", arg_type=int,
+        help="shard the round's agent axis across this many devices "
+             "(n-agents must divide evenly; 1 = unsharded)"))
+    # explicit (agent, model) mesh extents as "AxM", e.g. "8x1"; None
+    # derives (agent_shards, 1).  The model axis additionally shards
+    # the packed buffer's columns when it divides the width.
+    mesh_shape: Optional[str] = dataclasses.field(default=None, metadata=_cli(
+        flag="--mesh-shape", arg_type=str,
+        help="explicit AGENTSxMODEL device mesh, e.g. '8x1' "
+             "(default: agent-shards x 1)"))
 
     def __post_init__(self):
         groups = self.agent_groups
@@ -346,13 +360,70 @@ class FedSpec:
             compress_backend=self.compression.backend,
             engine_backend=self.engine_backend,
             state_layout=self.state_layout,
-            staleness=self.staleness_config())
+            staleness=self.staleness_config(),
+            agent_shards=self.resolved_agent_shards())
 
     def staleness_config(self) -> engine.StalenessConfig:
         """The engine :class:`repro.fed.engine.StalenessConfig` this
         spec denotes (validates mode / bound on construction)."""
         return engine.StalenessConfig(mode=self.async_mode,
                                       max_staleness=self.max_staleness)
+
+    def mesh_axes(self) -> Optional[tuple[int, int]]:
+        """The ``(agent, model)`` mesh extents this spec denotes, or
+        None when the run is unsharded.  ``mesh_shape`` wins when set
+        (and must agree with a non-default ``agent_shards``)."""
+        if self.mesh_shape is None:
+            if self.agent_shards == 1:
+                return None
+            return (self.agent_shards, 1)
+        parts = self.mesh_shape.lower().split("x")
+        if len(parts) != 2:
+            raise ValueError(
+                f"mesh_shape must be 'AGENTSxMODEL' (e.g. '8x1'), got "
+                f"{self.mesh_shape!r}")
+        try:
+            a, m = (int(p) for p in parts)
+        except ValueError:
+            raise ValueError(
+                f"mesh_shape extents must be integers, got "
+                f"{self.mesh_shape!r}") from None
+        if a < 1 or m < 1:
+            raise ValueError(f"mesh_shape extents must be >= 1, got "
+                             f"{self.mesh_shape!r}")
+        if self.agent_shards != 1 and self.agent_shards != a:
+            raise ValueError(
+                f"agent_shards={self.agent_shards} disagrees with "
+                f"mesh_shape={self.mesh_shape!r} (agent extent {a}); "
+                f"set one, or make them agree")
+        return (a, m)
+
+    def resolved_agent_shards(self) -> int:
+        """The agent-axis device count the engine must validate against
+        (1 when unsharded)."""
+        axes = self.mesh_axes()
+        return 1 if axes is None else axes[0]
+
+    def build_mesh(self):
+        """The ``jax.sharding.Mesh`` this spec denotes, or None when
+        unsharded.  Raises with the host-device escape hatch named when
+        the platform has too few devices."""
+        axes = self.mesh_axes()
+        if axes is None:
+            return None
+        import numpy as np
+        from jax.sharding import Mesh
+
+        a, m = axes
+        devices = jax.devices()
+        if len(devices) < a * m:
+            raise ValueError(
+                f"mesh of {a}x{m} needs {a * m} devices, but only "
+                f"{len(devices)} are visible -- on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{a * m} before importing jax")
+        return Mesh(np.asarray(devices[:a * m]).reshape(a, m),
+                    ("agent", "model"))
 
     def moduli_for(self, gamma: Optional[float]) \
             -> tuple[float, Optional[float]]:
@@ -440,6 +511,7 @@ class FedSpec:
         if name == "agd":
             self._check_agd_moduli(self.gamma)
         self._validate_groups()
+        self._validate_mesh()
         return self
 
     def _check_agd_moduli(self, gamma: Optional[float],
@@ -484,6 +556,34 @@ class FedSpec:
                 f"agent_groups sizes sum to {total}, but "
                 f"n_agents={self.n_agents} -- groups must partition the "
                 f"agent axis")
+
+    def _validate_mesh(self) -> None:
+        if self.agent_shards < 1:
+            raise ValueError(f"agent_shards must be >= 1, got "
+                             f"{self.agent_shards}")
+        shards = self.resolved_agent_shards()  # parses/checks mesh_shape
+        if shards == 1:
+            return
+        if self.n_agents is not None and self.n_agents % shards != 0:
+            raise ValueError(
+                f"n_agents={self.n_agents} is not divisible by "
+                f"agent_shards={shards} -- every device must own the "
+                f"same number of agent rows (pad n_agents or change the "
+                f"shard count)")
+        groups = self.resolved_groups()
+        if groups is not None and self.n_agents is not None:
+            rows = self.n_agents // shards
+            edge = 0
+            for i, g in enumerate(groups[:-1]):
+                edge += g.size
+                if edge % rows != 0:
+                    raise ValueError(
+                        f"agent group {i} ends at row {edge}, which is "
+                        f"not a multiple of the shard size {rows} "
+                        f"(n_agents={self.n_agents} / agent_shards="
+                        f"{shards}) -- a solver group may not straddle "
+                        f"a device boundary; re-cut the groups or "
+                        f"change the shard count")
 
     # ------------------------------------------------------------------
     # Legacy-config bridge (kept bit-compatible)
@@ -756,7 +856,8 @@ class DenseTrainer(FedTrainer):
                            prox_h=prox_override,
                            solver_groups=solver_groups,
                            participation=part if isinstance(part, tuple)
-                           else None)
+                           else None,
+                           mesh=self._resolved.build_mesh())
 
     def init(self, key: jax.Array):
         return self.algo.init(key)
@@ -825,11 +926,36 @@ class ModelTrainer(FedTrainer):
         self.packed_meta = (runtime.packed_layout(model, self.spec)
                             if self.spec.state_layout == "packed"
                             else None)
+        # sharded rounds: the (agent, model) mesh of the run; the round
+        # engine wraps the edges in shard_map on it and init places the
+        # state by repro.fed.sharding.fed_state_specs (the one placement
+        # source, shared with the dry-run compiler)
+        self.mesh = self.spec.build_mesh()
         self._step = jax.jit(
             runtime.make_train_step(model, spec, use_remat=use_remat))
 
+    def _state_shardings(self):
+        from repro.fed import sharding
+
+        axes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        agent_axis, fsdp_axis = sharding.fed_axes(axes)
+        shapes = jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+        stacked = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                (self.spec.n_agents,) + s.shape, s.dtype), shapes)
+        specs = sharding.fed_state_specs(
+            stacked, fsdp_axis=fsdp_axis, agent_axis=agent_axis,
+            axis_sizes=axes,
+            compressed=self.spec.compression.name != "none",
+            packed=self.spec.state_layout == "packed",
+            stale=self.spec.staleness_config().enabled)
+        return sharding.shardings(self.mesh, specs)
+
     def init(self, key: jax.Array):
-        return self._runtime.init_state(self.model, key, self.spec)
+        state = self._runtime.init_state(self.model, key, self.spec)
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self._state_shardings())
 
     def step(self, state, batch, key: jax.Array, arrival=None):
         """One jitted Fed-PLT round on an agent-stacked batch.

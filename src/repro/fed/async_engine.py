@@ -174,17 +174,24 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
                      y_tag: Any, staleness: jnp.ndarray, key: jax.Array,
                      local_solver: SolverAssignment,
                      prox_h: ProxH = None,
-                     arrival: Optional[jnp.ndarray] = None) \
-        -> AsyncRoundResult:
+                     arrival: Optional[jnp.ndarray] = None,
+                     mesh=None) -> AsyncRoundResult:
     """One bounded-staleness round on agent-stacked pytrees (module
     contract above).  Mirrors :func:`repro.fed.engine.round_step`'s key
     schedule and edge formulas exactly; ``arrival`` optionally replaces
-    the Bernoulli draw with a realized schedule row (broker replay)."""
+    the Bernoulli draw with a realized schedule row (broker replay).
+    With a ``mesh`` the edges run under ``shard_map`` and every async
+    carrier (``y_tag``, ``staleness``, the arrival rows) shards on the
+    agent axis with the state; the staleness selects between the edges
+    are per-row elementwise, so GSPMD shards them transparently (mesh
+    contract in :mod:`repro.fed.engine`)."""
+    if mesh is not None:
+        engine.validate_mesh(cfg, mesh, local_solver)
     key, k_part, k_solve = jax.random.split(key, 3)
 
     # -- coordinator edge: identical to the synchronous round -----------
     z_seen = t if cfg.compressed else z
-    y, v_fresh = engine.coordinator_edge(cfg, z, z_seen, prox_h)
+    y, v_fresh = engine.coordinator_edge(cfg, z, z_seen, prox_h, mesh)
 
     # -- training targets: fresh agents pull this round's reflection,
     # stale agents reproduce the one they pulled (z_i unchanged while
@@ -205,7 +212,8 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
 
     # -- synchronous downlink edge with the arrival mask streamed like
     # the participation mask (fused kernel path unchanged) --------------
-    x_upd, z_upd = engine.agent_edge(cfg, u, w, x, z, y, z_seen, prox_h)
+    x_upd, z_upd = engine.agent_edge(cfg, u, w, x, z, y, z_seen, prox_h,
+                                     mesh)
 
     # -- stale arrivals: the increment is tagged with the coordinator
     # point it was computed against, not this round's -------------------
@@ -246,18 +254,22 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
                             key: jax.Array,
                             local_solver: SolverAssignment,
                             prox_h: ProxH = None,
-                            arrival: Optional[jnp.ndarray] = None) \
-        -> AsyncRoundResult:
+                            arrival: Optional[jnp.ndarray] = None,
+                            mesh=None) -> AsyncRoundResult:
     """:func:`async_round_step` on the RESIDENT ``(N, width)`` buffers
     (engine layout contract): ``y_tag`` is an ``(N, width)`` buffer and
     ``y`` comes back ``(1, width)``.  Same arithmetic per column, so
     packed async trajectories are bitwise identical to the tree path
-    per realization, exactly like the synchronous engine."""
+    per realization, exactly like the synchronous engine.  ``mesh``
+    shards the edges and every async carrier on the agent axis (mesh
+    contract in :mod:`repro.fed.engine`)."""
+    if mesh is not None:
+        engine.validate_mesh(cfg, mesh, local_solver)
     key, k_part, k_solve = jax.random.split(key, 3)
 
     z_seen = t if cfg.compressed else z
     y, v_fresh = engine.coordinator_edge_packed(cfg, z, z_seen, meta,
-                                                prox_h)
+                                                prox_h, mesh)
 
     fresh_col = (staleness == 0).reshape(-1, 1)
     v_eff = jnp.where(fresh_col, v_fresh, 2.0 * y_tag - z)
@@ -269,7 +281,7 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     u = arrival_mask(k_part, cfg, staleness, arrival)
 
     x_upd, z_upd = engine.agent_edge_packed(cfg, u, w, x, z, y, z_seen,
-                                            prox_h)
+                                            prox_h, mesh)
 
     arrived = u != 0
     stale_arrival = (arrived & ~fresh_col.reshape(-1)).reshape(-1, 1)

@@ -89,6 +89,34 @@ of the federated state ``(x, z, t)``:
   zero out-of-segment columns under both backends, so the coordinator
   copy ``t``'s padding never advances.  ``jnp.where`` masking keeps
   them NaN-safe.
+
+SHARDED ROUNDS -- the MESH CONTRACT (ROADMAP item 2): passing a
+``mesh`` (an ``(agent, model)`` :class:`jax.sharding.Mesh`) to
+:func:`round_step` / :func:`packed_round_step` (and the async variants)
+runs the round's EDGES under ``shard_map``, with each device owning a
+contiguous ``n_agents / agent_shards`` row block of every per-agent
+carrier -- state buffers/leaves, the participation draw, and (async)
+the staleness counters, ``y_tag``, and arrival rows all shard together
+on the agent axis.  The uplink's agent mean becomes: an in-VMEM local
+row reduce per shard (one fused kernel launch under the pallas
+backend), ONE ``(1, width)`` cross-device ``psum`` of the partials,
+then ``/ N -> prox -> reflection`` at coordinator size -- ``zbar``
+still never materializes at agent-stack size.  The downlink consumes
+the replicated coordinator point with purely local per-row work (the
+second launch), so a sharded pallas round still runs exactly TWO fused
+edge launches PER SHARD.  Everything between the edges (local solvers,
+compression, masks, the key schedule) is row-wise or
+coordinator-sized and runs under GSPMD unchanged, which is what keeps
+the parity contract: a 1-DEVICE MESH IS BITWISE-IDENTICAL to the
+unsharded engine on every layout x backend x compressor combo
+(asserted in tests) -- the degenerate case of one code path, not a
+separate engine -- while multi-device trajectories agree with
+single-device to fp32 rounding only (cross-device psum reduction order
+is not bitwise-stable, measured at one ulp in practice).
+Solver groups must land shard-aligned (group boundaries at multiples
+of the shard row block) or the round step raises before tracing;
+a non-elementwise custom prox falls back to the unsharded edge formula
+(GSPMD still shards the arithmetic, there is just no per-shard kernel).
 """
 
 from __future__ import annotations
@@ -99,6 +127,8 @@ from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.fed import compress as compress_lib
 from repro.fed.compress import compress_increment, get_compressor
@@ -265,6 +295,11 @@ class RoundConfig:
     # dispatch to repro.fed.async_engine when enabled)
     staleness: StalenessConfig = dataclasses.field(
         default_factory=StalenessConfig)
+    # number of contiguous row blocks the agent axis is sharded into
+    # when a mesh is passed to the round step (mesh contract in the
+    # module docstring); 1 = unsharded.  Every shard owns
+    # n_agents/agent_shards agents, so N must divide evenly
+    agent_shards: int = 1
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
@@ -287,6 +322,17 @@ class RoundConfig:
         object.__setattr__(self, "damping",
                            _numeric_scalar("damping", self.damping))
         object.__setattr__(self, "rho", _numeric_scalar("rho", self.rho))
+        shards = _int_scalar("agent_shards", self.agent_shards)
+        if shards < 1:
+            raise ValueError(f"agent_shards must be >= 1, got {shards}")
+        object.__setattr__(self, "agent_shards", shards)
+        if self.n_agents % shards:
+            raise ValueError(
+                f"n_agents={self.n_agents} is not divisible by "
+                f"agent_shards={shards}: every shard owns an equal "
+                f"contiguous row block of the agent axis -- choose "
+                f"n_agents a multiple of the shard count (or reduce "
+                f"agent_shards)")
         if self.staleness is None:
             object.__setattr__(self, "staleness", StalenessConfig())
         elif not isinstance(self.staleness, StalenessConfig):
@@ -405,8 +451,188 @@ def _uniform_stack(*trees) -> bool:
     return len({(l.shape[0], jnp.result_type(l)) for l in leaves}) == 1
 
 
+# ---------------------------------------------------------------------------
+# Mesh plumbing (the mesh contract in the module docstring)
+# ---------------------------------------------------------------------------
+
+def mesh_agent_shards(mesh) -> int:
+    """The extent of ``mesh``'s agent axis (1 when ``mesh`` is None)."""
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if "agent" not in sizes:
+        raise ValueError(
+            f"sharded rounds need a mesh with an 'agent' axis, got "
+            f"axes {tuple(mesh.axis_names)}")
+    return int(sizes["agent"])
+
+
+def _mesh_col_axis(mesh, width: int) -> Optional[str]:
+    """The mesh axis that additionally shards the packed column axis:
+    ``"model"`` when the mesh has one whose extent divides the buffer
+    width, else None (columns replicated within each agent shard)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = int(sizes.get("model", 0))
+    return "model" if m > 1 and width % m == 0 else None
+
+
+def validate_mesh(cfg: RoundConfig, mesh,
+                  local_solver: SolverAssignment = None) -> None:
+    """Trace-time screening of a sharded round: the mesh's agent axis
+    must evenly partition the agent axis, agree with
+    ``cfg.agent_shards`` when that was pinned, and every solver-group
+    boundary must land on a shard boundary (group slicing happens on
+    the host; a group straddling shards would silently gather rows
+    across devices every round)."""
+    shards = mesh_agent_shards(mesh)
+    if cfg.n_agents % shards:
+        raise ValueError(
+            f"n_agents={cfg.n_agents} is not divisible by the mesh's "
+            f"agent axis ({shards} shards): every shard owns an equal "
+            f"contiguous row block -- choose n_agents a multiple of "
+            f"the shard count or shrink the mesh")
+    if cfg.agent_shards > 1 and cfg.agent_shards != shards:
+        raise ValueError(
+            f"RoundConfig.agent_shards={cfg.agent_shards} but the mesh "
+            f"has {shards} agent shards: drop one of the two or make "
+            f"them agree")
+    if (shards > 1 and local_solver is not None
+            and not callable(local_solver)
+            and not isinstance(local_solver, SolverGroup)):
+        rows = cfg.n_agents // shards
+        start = 0
+        for g_idx, grp in enumerate(tuple(local_solver)[:-1]):
+            start += grp.size
+            if start % rows:
+                raise ValueError(
+                    f"solver group {g_idx} ends at agent {start}, "
+                    f"inside an agent shard: with {shards} shards of "
+                    f"{rows} agents each, group boundaries must be "
+                    f"multiples of {rows} -- resize the groups or "
+                    f"change the shard count")
+
+
+def _row_specs(tree):
+    """Per-leaf ``P('agent', None, ...)`` specs for agent-stacked
+    pytrees (rank-matched, columns replicated)."""
+    return tree_map(
+        lambda l: P(*(("agent",) + (None,) * (l.ndim - 1))), tree)
+
+
+def _rep_specs(tree):
+    """Per-leaf fully-replicated specs (coordinator pytrees carry no
+    agent axis)."""
+    return tree_map(lambda l: P(*((None,) * l.ndim)), tree)
+
+
+def _uplink_sharded_xla(cfg: RoundConfig, z: jnp.ndarray,
+                        z_seen: jnp.ndarray, prox_h: ProxH, mesh,
+                        col: Optional[str]) \
+        -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sharded packed uplink, xla backend: local column sums per shard,
+    one psum of the ``(1, width)`` partials, then the coordinator-sized
+    chain and the local reflection -- the same formulation the fused
+    sharded kernel realizes (bitwise on a 1-device mesh: ``div(psum(
+    sum), N)`` == ``div(sum, N)`` and the reflection reads the shared
+    ``y``, exactly like the unsharded xla edge)."""
+    n = cfg.n_agents
+    rho_eff = cfg.rho / cfg.n_agents
+    lagged = z_seen is not z
+
+    def body(z_l, *rest):
+        seen = rest[0] if rest else z_l
+        part = jnp.sum(seen, axis=0, keepdims=True)
+        zbar = jax.lax.psum(part, "agent") / n
+        y = zbar if prox_h is None else prox_h(zbar, rho_eff)
+        return y, 2.0 * y - z_l
+
+    spec = P("agent", col)
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(spec, spec) if lagged else (spec,),
+                  out_specs=(P(None, col), spec), check_rep=False)
+    return f(z, z_seen) if lagged else f(z)
+
+
+def _downlink_sharded_xla(cfg: RoundConfig, u: jnp.ndarray,
+                          w: jnp.ndarray, x: jnp.ndarray,
+                          z: jnp.ndarray, y: jnp.ndarray, mesh,
+                          col: Optional[str]) \
+        -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sharded packed downlink, xla backend: purely local per-row work
+    consuming the replicated coordinator point (op-for-op the unsharded
+    xla edge, which already consumes ``y``)."""
+    def body(u_l, w_l, x_l, z_l, y_l):
+        mask = (u_l != 0).reshape(-1, 1)
+        x_new = jnp.where(mask, w_l, x_l)
+        z_upd = z_l + 2.0 * cfg.damping * (w_l - y_l)
+        return x_new, jnp.where(mask, z_upd, z_l)
+
+    spec = P("agent", col)
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(P("agent"), spec, spec, spec, P(None, col)),
+                  out_specs=(spec, spec), check_rep=False)
+    return f(u.reshape(-1), w, x, z, y)
+
+
+def _tree_uplink_sharded(cfg: RoundConfig, z: Any, z_seen: Any,
+                         prox_h: ProxH, mesh) -> Tuple[Any, Any]:
+    """Sharded uplink on agent-stacked pytrees: per-leaf local sums,
+    one psum per leaf, chain at coordinator size.  The ``y`` leaves are
+    COMPLETE after the agent-axis reduction, so ANY per-leaf prox --
+    including non-elementwise customs the packed paths must refuse --
+    is applied here unchanged."""
+    n = cfg.n_agents
+    rho_eff = cfg.rho / cfg.n_agents
+    lagged = z_seen is not z
+
+    def body(z_t, *rest):
+        seen = rest[0] if rest else z_t
+        zbar = tree_map(
+            lambda sl: jax.lax.psum(jnp.sum(sl, axis=0), "agent") / n,
+            seen)
+        y = (zbar if prox_h is None
+             else tree_map(lambda l: prox_h(l, rho_eff), zbar))
+        v = tree_map(lambda yl, zl: 2.0 * yl[None] - zl, y, z_t)
+        return y, v
+
+    rows = _row_specs(z)
+    y_specs = tree_map(lambda l: P(*((None,) * (l.ndim - 1))), z)
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(rows, _row_specs(z_seen)) if lagged
+                  else (rows,),
+                  out_specs=(y_specs, rows), check_rep=False)
+    return f(z, z_seen) if lagged else f(z)
+
+
+def _tree_downlink_sharded(cfg: RoundConfig, u: jnp.ndarray, w: Any,
+                           x: Any, z: Any, y: Any,
+                           mesh) -> Tuple[Any, Any]:
+    """Sharded downlink on agent-stacked pytrees: the Krasnosel'skii
+    update + NaN-safe participation selects per row block, consuming
+    the replicated coordinator tree."""
+    def body(u_l, w_t, x_t, z_t, y_t):
+        mask = u_l != 0
+
+        def mix(nl, ol):
+            return jnp.where(
+                mask.reshape((-1,) + (1,) * (nl.ndim - 1)), nl, ol)
+
+        x_new = tree_map(mix, w_t, x_t)
+        z_upd = tree_map(
+            lambda zl, wl, yl: zl + 2.0 * cfg.damping * (wl - yl[None]),
+            z_t, w_t, y_t)
+        return x_new, tree_map(mix, z_upd, z_t)
+
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(P("agent"), _row_specs(w), _row_specs(x),
+                            _row_specs(z), _rep_specs(y)),
+                  out_specs=(_row_specs(x), _row_specs(z)),
+                  check_rep=False)
+    return f(u.reshape(-1), w, x, z, y)
+
+
 def coordinator_edge(cfg: RoundConfig, z: Any, z_seen: Any,
-                     prox_h: ProxH = None) -> Tuple[Any, Any]:
+                     prox_h: ProxH = None, mesh=None) -> Tuple[Any, Any]:
     """The round's uplink edge: ``y = prox_{rho h/N}(mean_i z_seen_i)``
     and the reflection ``v = 2 y - z`` (``z_seen`` is the coordinator's
     lagged copy ``t`` under a compressed exchange, ``z`` itself
@@ -417,7 +643,8 @@ def coordinator_edge(cfg: RoundConfig, z: Any, z_seen: Any,
     agent-axis mean-reduce, the elementwise prox, and the reflected
     broadcast run as ONE :mod:`repro.kernels.round_edge` launch --
     ``zbar`` never materializes in HBM (parity contract: module
-    docstring)."""
+    docstring).  With a ``mesh`` the same edge runs under ``shard_map``
+    (mesh contract: module docstring)."""
     if (cfg.engine_backend == "pallas" and fusible_prox(prox_h)
             and _uniform_stack(z, z_seen)):
         from repro.kernels.round_edge import ops as edge_ops
@@ -425,17 +652,26 @@ def coordinator_edge(cfg: RoundConfig, z: Any, z_seen: Any,
         buf_z, meta = compress_lib.pack_leaves(z)
         buf_t = (None if z_seen is z
                  else compress_lib.pack_leaves(z_seen)[0])
-        y_buf, v_buf = edge_ops.round_uplink(
-            buf_z, buf_t, prox=prox_h, rho_eff=cfg.rho / cfg.n_agents)
+        if mesh is not None:
+            y_buf, v_buf = edge_ops.round_uplink_sharded(
+                buf_z, buf_t, mesh=mesh, n_total=cfg.n_agents,
+                prox=prox_h, rho_eff=cfg.rho / cfg.n_agents,
+                col_axis=_mesh_col_axis(mesh, buf_z.shape[1]))
+        else:
+            y_buf, v_buf = edge_ops.round_uplink(
+                buf_z, buf_t, prox=prox_h,
+                rho_eff=cfg.rho / cfg.n_agents)
         return (compress_lib.unpack_coord(y_buf, meta),
                 compress_lib.unpack_leaves(v_buf, meta))
+    if mesh is not None:
+        return _tree_uplink_sharded(cfg, z, z_seen, prox_h, mesh)
     y = coordinator_prox(z_seen, cfg, prox_h)
     return y, reflect(y, z)
 
 
 def agent_edge(cfg: RoundConfig, u: jnp.ndarray, w: Any, x: Any, z: Any,
                y: Any, z_seen: Any = None,
-               prox_h: ProxH = None) -> Tuple[Any, Any]:
+               prox_h: ProxH = None, mesh=None) -> Tuple[Any, Any]:
     """The round's downlink edge: the Krasnosel'skii update
     ``z + 2*damping*(w - y)`` and the participation selects of both
     state variables (``x`` from the solver result ``w``, ``z`` from the
@@ -462,13 +698,22 @@ def agent_edge(cfg: RoundConfig, u: jnp.ndarray, w: Any, x: Any, z: Any,
         x_buf, meta = compress_lib.pack_leaves(x)
         w_buf = compress_lib.pack_leaves(w)[0]
         z_buf = compress_lib.pack_leaves(z)[0]
-        t_buf = (None if z_seen is z
-                 else compress_lib.pack_leaves(z_seen)[0])
-        xb, zb = edge_ops.round_downlink(
-            x_buf, w_buf, z_buf, u, t_buf, prox=prox_h,
-            rho_eff=cfg.rho / cfg.n_agents, damping=cfg.damping)
+        if mesh is not None:
+            y_buf = compress_lib.pack_coord(y, meta)
+            xb, zb = edge_ops.round_downlink_sharded(
+                x_buf, w_buf, z_buf, y_buf, u, mesh=mesh,
+                damping=cfg.damping,
+                col_axis=_mesh_col_axis(mesh, x_buf.shape[1]))
+        else:
+            t_buf = (None if z_seen is z
+                     else compress_lib.pack_leaves(z_seen)[0])
+            xb, zb = edge_ops.round_downlink(
+                x_buf, w_buf, z_buf, u, t_buf, prox=prox_h,
+                rho_eff=cfg.rho / cfg.n_agents, damping=cfg.damping)
         return (compress_lib.unpack_leaves(xb, meta),
                 compress_lib.unpack_leaves(zb, meta))
+    if mesh is not None:
+        return _tree_downlink_sharded(cfg, u, w, x, z, y, mesh)
     x_new = masked_mix(u, w, x)
     z_upd = tree_map(
         lambda zl, wl, yl: zl + 2.0 * cfg.damping * (wl - yl[None]),
@@ -484,7 +729,7 @@ def agent_edge(cfg: RoundConfig, u: jnp.ndarray, w: Any, x: Any, z: Any,
 
 def coordinator_edge_packed(cfg: RoundConfig, z: jnp.ndarray,
                             z_seen: jnp.ndarray, meta,
-                            prox_h: ProxH = None) \
+                            prox_h: ProxH = None, mesh=None) \
         -> Tuple[jnp.ndarray, jnp.ndarray]:
     """:func:`coordinator_edge` on resident ``(N, width)`` buffers:
     returns ``(y, v)`` with ``y`` the ``(1, width)`` coordinator buffer.
@@ -497,6 +742,19 @@ def coordinator_edge_packed(cfg: RoundConfig, z: jnp.ndarray,
     ``(1, width)`` mean -- coordinator-sized traffic, not agent-stack
     traffic."""
     rho_eff = cfg.rho / cfg.n_agents
+    if mesh is not None and fusible_prox(prox_h):
+        col = _mesh_col_axis(mesh, z.shape[1])
+        if cfg.engine_backend == "pallas":
+            from repro.kernels.round_edge import ops as edge_ops
+
+            return edge_ops.round_uplink_sharded(
+                z, None if z_seen is z else z_seen, mesh=mesh,
+                n_total=cfg.n_agents, prox=prox_h, rho_eff=rho_eff,
+                col_axis=col)
+        return _uplink_sharded_xla(cfg, z, z_seen, prox_h, mesh, col)
+    # a non-elementwise custom prox under a mesh falls through to the
+    # unsharded formula: the prox sees the coordinator-sized tree and
+    # GSPMD shards the agent-stack arithmetic (mesh contract)
     if cfg.engine_backend == "pallas" and fusible_prox(prox_h):
         from repro.kernels.round_edge import ops as edge_ops
 
@@ -518,12 +776,21 @@ def coordinator_edge_packed(cfg: RoundConfig, z: jnp.ndarray,
 def agent_edge_packed(cfg: RoundConfig, u: jnp.ndarray, w: jnp.ndarray,
                       x: jnp.ndarray, z: jnp.ndarray, y: jnp.ndarray,
                       z_seen: jnp.ndarray,
-                      prox_h: ProxH = None) \
+                      prox_h: ProxH = None, mesh=None) \
         -> Tuple[jnp.ndarray, jnp.ndarray]:
     """:func:`agent_edge` on resident ``(N, width)`` buffers (``y`` is
     the ``(1, width)`` coordinator buffer): Krasnosel'skii update +
     participation selects, ``jnp.where`` semantics preserved so a
     diverged (NaN) local solve cannot leak into inactive agents."""
+    if mesh is not None and fusible_prox(prox_h):
+        col = _mesh_col_axis(mesh, z.shape[1])
+        if cfg.engine_backend == "pallas":
+            from repro.kernels.round_edge import ops as edge_ops
+
+            return edge_ops.round_downlink_sharded(
+                x, w, z, y, u, mesh=mesh, damping=cfg.damping,
+                col_axis=col)
+        return _downlink_sharded_xla(cfg, u, w, x, z, y, mesh, col)
     if cfg.engine_backend == "pallas" and fusible_prox(prox_h):
         from repro.kernels.round_edge import ops as edge_ops
 
@@ -539,7 +806,7 @@ def agent_edge_packed(cfg: RoundConfig, u: jnp.ndarray, w: jnp.ndarray,
 def packed_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
                       z: jnp.ndarray, t: jnp.ndarray, key: jax.Array,
                       local_solver: SolverAssignment,
-                      prox_h: ProxH = None) -> RoundResult:
+                      prox_h: ProxH = None, mesh=None) -> RoundResult:
     """One Fed-PLT round on the RESIDENT packed state: ``x``/``z``/``t``
     are ``(N, width)`` buffers laid out by ``meta`` (a static
     :class:`repro.fed.compress.PackedMeta`), and the returned
@@ -553,15 +820,18 @@ def packed_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     a tree solver with :func:`repro.fed.solvers.wrap_packed_solver`).
     :func:`run_solvers` works unchanged -- a buffer is a pytree, group
     slicing is row slicing."""
+    if mesh is not None:
+        validate_mesh(cfg, mesh, local_solver)
     key, k_part, k_solve = jax.random.split(key, 3)
 
     z_seen = t if cfg.compressed else z
-    y, v = coordinator_edge_packed(cfg, z, z_seen, meta, prox_h)
+    y, v = coordinator_edge_packed(cfg, z, z_seen, meta, prox_h, mesh)
 
     w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
 
     u = participation_mask(k_part, cfg)
-    x_new, z_new = agent_edge_packed(cfg, u, w, x, z, y, z_seen, prox_h)
+    x_new, z_new = agent_edge_packed(cfg, u, w, x, z, y, z_seen, prox_h,
+                                     mesh)
 
     if cfg.compressed:
         q = compress_lib.compress_increment_packed(z_new - t, meta, cfg)
@@ -655,7 +925,7 @@ def run_solvers(local_solver: SolverAssignment, x: Any, v: Any,
 
 def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
                local_solver: SolverAssignment,
-               prox_h: ProxH = None) -> RoundResult:
+               prox_h: ProxH = None, mesh=None) -> RoundResult:
     """One Fed-PLT round on agent-stacked pytrees.
 
     ``t`` is the coordinator's copy of ``z`` (pass ``z`` itself when the
@@ -665,20 +935,22 @@ def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
     sequence of :class:`SolverGroup` partitioning the agent axis (see
     :func:`run_solvers`).
     """
+    if mesh is not None:
+        validate_mesh(cfg, mesh, local_solver)
     key, k_part, k_solve = jax.random.split(key, 3)
 
     # -- coordinator edge: prox of the mean of the *transmitted* copies
     # when the exchange is compressed (t_i), else the exact z_i (Lemma
     # 6), fused with the reflection ------------------------------------
     z_seen = t if cfg.compressed else z
-    y, v = coordinator_edge(cfg, z, z_seen, prox_h)
+    y, v = coordinator_edge(cfg, z, z_seen, prox_h, mesh)
 
     # -- agents: warm-started local training on the reflected states ----
     w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
 
     # -- agent edge: Krasnosel'skii z-update + partial participation ----
     u = participation_mask(k_part, cfg)
-    x_new, z_new = agent_edge(cfg, u, w, x, z, y, z_seen, prox_h)
+    x_new, z_new = agent_edge(cfg, u, w, x, z, y, z_seen, prox_h, mesh)
 
     # -- compressed uplink: t advances by the transmitted increment ------
     if cfg.compressed:

@@ -174,6 +174,7 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
     spec = as_spec(fcfg).validate()   # the ONE validation site
     scfg = spec.solver_config()
     ecfg = spec.round_config()
+    mesh = spec.build_mesh()          # None = unsharded rounds
     prox_h = spec.resolve_prox_h()
     mu, L = spec.moduli()
     groups = spec.resolved_groups()
@@ -237,12 +238,12 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
                 res = async_engine.packed_async_round_step(
                     ecfg, meta, state.x, state.z, t, state.y_tag,
                     state.staleness, rkey, local_solver, prox_h=prox_h,
-                    arrival=arrival)
+                    arrival=arrival, mesh=mesh)
             else:
                 res = async_engine.async_round_step(
                     ecfg, state.x, state.z, t, state.y_tag,
                     state.staleness, rkey, local_solver, prox_h=prox_h,
-                    arrival=arrival)
+                    arrival=arrival, mesh=mesh)
         elif arrival is not None:
             raise ValueError("arrival schedules require async_mode="
                              "'stale' (synchronous rounds draw "
@@ -250,10 +251,11 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
         elif meta is not None:
             res = engine.packed_round_step(ecfg, meta, state.x, state.z,
                                            t, rkey, local_solver,
-                                           prox_h=prox_h)
+                                           prox_h=prox_h, mesh=mesh)
         else:
             res = engine.round_step(ecfg, state.x, state.z, t, rkey,
-                                    local_solver, prox_h=prox_h)
+                                    local_solver, prox_h=prox_h,
+                                    mesh=mesh)
 
         # aux is the (N_e, A) per-epoch loss stack when homogeneous, a
         # tuple of per-group (N_e_g, size_g) stacks when grouped (epoch

@@ -125,12 +125,40 @@ def param_specs(params, *, fsdp_axis: Optional[str] = "data",
     return jax.tree_util.tree_map_with_path(spec, params)
 
 
+def fed_axes(axis_sizes) -> tuple[Optional[str], Optional[str]]:
+    """``(agent_axis, fsdp_axis)`` of a mesh for fed mode -- the ONE
+    axis-picking rule every placement site shares: a dedicated 'agent'
+    axis (make_fed_mesh / the engine's round mesh) wins, then a
+    multi-pod 'pod' axis, else the agent stack rides 'data' and FSDP is
+    off (one axis cannot carry both)."""
+    if "agent" in axis_sizes:
+        return "agent", "data" if "data" in axis_sizes else None
+    if "pod" in axis_sizes:
+        return "pod", "data" if "data" in axis_sizes else None
+    if "data" in axis_sizes:
+        return "data", None
+    return None, None
+
+
+def fed_batch_specs(batch, agent_axis: Optional[str],
+                    inner_axis: Optional[str] = None):
+    """Specs for an agent-stacked batch ``(A, per_agent_batch, ...)``:
+    agents over ``agent_axis``, the per-agent batch dim over
+    ``inner_axis`` (only meaningful when the agent axis is dedicated)."""
+    return jax.tree_util.tree_map(
+        lambda l: P(agent_axis, *((inner_axis,) + (None,) * (l.ndim - 2)
+                                  if l.ndim >= 2 else ())), batch)
+
+
 def fed_state_specs(stacked_params, *, fsdp_axis: Optional[str] = "data",
                     agent_axis: Optional[str] = None,
                     axis_sizes: Optional[dict] = None,
                     compressed: bool = False,
-                    packed: bool = False):
-    """PartitionSpec pytree for a :class:`repro.fed.runtime.FedState`.
+                    packed: bool = False,
+                    stale: bool = False):
+    """PartitionSpec pytree for a :class:`repro.fed.runtime.FedState` --
+    the single placement source for fed-mode state (build_trainer, the
+    dry-run compiler, checkpoint restore targets).
 
     ``stacked_params``: the agent-stacked parameter pytree (or its
     ShapeDtypeStructs) -- x, z, and (when ``compressed``) the
@@ -140,8 +168,12 @@ def fed_state_specs(stacked_params, *, fsdp_axis: Optional[str] = "data",
     ``packed``: specs for the packed resident layout instead (engine
     layout contract) -- each state variable is ONE ``(A, width)``
     buffer: rows shard over ``agent_axis``, columns over ``fsdp_axis``
-    when the lane-aligned width divides (the flat-slab sharding ROADMAP
-    item 2 targets; per-leaf path rules do not apply to a buffer).
+    when that axis exists on the mesh and the lane-aligned width
+    divides its extent (per-leaf path rules do not apply to a buffer).
+
+    ``stale``: bounded-staleness async carriers -- the pulled
+    coordinator point ``y_tag`` shards like z; the per-agent
+    ``staleness`` counters shard on the agent axis alone.
     """
     from repro.fed.runtime import FedState
 
@@ -149,15 +181,24 @@ def fed_state_specs(stacked_params, *, fsdp_axis: Optional[str] = "data",
         from repro.fed.compress import packed_meta
 
         width = packed_meta(stacked_params).width
-        col = (fsdp_axis if fsdp_axis is not None
-               and width % _axis_size(fsdp_axis, axis_sizes or {}) == 0
-               else None)
+        # columns ride the FSDP axis when the mesh has one, else the
+        # tensor axis (the engine's round mesh is (agent, model)); an
+        # axis must EXIST on the mesh and divide the width to qualify
+        col = None
+        for cand in (fsdp_axis, "model"):
+            if (cand is not None and axis_sizes is not None
+                    and cand in axis_sizes
+                    and width % _axis_size(cand, axis_sizes) == 0):
+                col = cand
+                break
         pspec = P(agent_axis, col)
     else:
         pspec = param_specs(stacked_params, fsdp_axis=fsdp_axis,
                             agent_axis=agent_axis, axis_sizes=axis_sizes)
     return FedState(x=pspec, z=pspec, step=P(),
-                    t=pspec if compressed else None)
+                    t=pspec if compressed else None,
+                    y_tag=pspec if stale else None,
+                    staleness=P(agent_axis) if stale else None)
 
 
 def shardings(mesh: Mesh, spec_tree):

@@ -126,6 +126,40 @@ def _downlink_lagged_kernel(x_ref, w_ref, z_ref, t_ref, u_ref,
     z_out_ref[...] = z_new.astype(z_out_ref.dtype)
 
 
+def _partial_sum_kernel(z_ref, s_ref):
+    """Sharded uplink, local half: the in-VMEM agent-axis reduce of ONE
+    shard's rows.  Under ``shard_map`` each device owns a contiguous
+    ``(N_local, M)`` row block; this kernel emits its ``(1, M)`` column
+    sums, the engine ``psum``s those partials over the agent axis and
+    finishes the chain (``/ N`` -> prox -> reflection) as
+    coordinator-sized XLA ops.  The division by the GLOBAL agent count
+    cannot happen here -- a shard only sees its own rows -- so unlike
+    :func:`_uplink_kernel` the kernel is a pure sum: ``div(psum(sum),
+    N)`` is bit-identical to the unsharded ``div(sum, N)`` on one shard
+    (asserted in tests), which is what makes the 1-device mesh the
+    degenerate case of the same code path."""
+    s_ref[...] = jnp.sum(z_ref[...], axis=0,
+                         keepdims=True).astype(s_ref.dtype)
+
+
+def _downlink_presummed_kernel(x_ref, w_ref, z_ref, y_ref, u_ref,
+                               x_out_ref, z_out_ref, *, damping):
+    """Sharded downlink: purely local per-row work consuming the
+    REPLICATED coordinator point ``y`` (1, M).  The unsharded
+    :func:`_downlink_kernel` recomputes the coordinator chain in-VMEM
+    instead, but a shard cannot -- the chain needs the cross-device
+    mean -- so this kernel takes the uplink's ``y`` as an input, exactly
+    like the engine's unfused xla path (``z + 2*damping*(w - y)`` with
+    ``y`` broadcast), whose folding it must and does match bit-for-bit
+    on a 1-device mesh (asserted in tests)."""
+    mask = u_ref[...] != 0          # (N, 1), broadcast across columns
+    x_new = jnp.where(mask, w_ref[...], x_ref[...])
+    z = z_ref[...]
+    z_upd = z + 2.0 * damping * (w_ref[...] - y_ref[...])
+    x_out_ref[...] = x_new.astype(x_out_ref.dtype)
+    z_out_ref[...] = jnp.where(mask, z_upd, z).astype(z_out_ref.dtype)
+
+
 class _DirectRef:
     """Minimal Ref shim for running a kernel body directly (grid == 1,
     interpret mode): ``ref[...]`` reads the full-buffer block,
@@ -245,6 +279,73 @@ def round_downlink_2d(x, w, z, t=None, *, u, prox_fn=None, rho_eff=1.0,
         kernel,
         grid=(m // bc,),
         in_specs=in_specs,
+        out_specs=(spec, spec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*args)
+
+
+def round_uplink_partial_2d(z, *, block_cols=BLOCK_COLS, interpret=True,
+                            emulate=False):
+    """Local half of the sharded uplink: the ``(1, M)`` column sums of
+    one shard's ``(N_local, M)`` row block.  The caller (ops.py) runs
+    this under ``shard_map``, psums the partials over the agent axis,
+    and finishes ``/ N -> prox -> reflection`` on coordinator-sized
+    arrays; ``zbar`` still never hits HBM at agent-stack size.
+    ``M % block_cols == 0`` (ops.py pads).
+    """
+    n, m = z.shape
+    bc = min(block_cols, m)
+    if m % bc:
+        raise ValueError(f"column count {m} not a multiple of the "
+                         f"column block {bc} (ops.py pads)")
+    spec = pl.BlockSpec((n, bc), lambda j: (0, j))
+    s_spec = pl.BlockSpec((1, bc), lambda j: (0, j))
+    out_shape = (jax.ShapeDtypeStruct((1, m), z.dtype),)
+    if interpret and bc == m and not emulate:
+        return _direct(_partial_sum_kernel, (z,), out_shape)[0]
+    return pl.pallas_call(
+        _partial_sum_kernel,
+        grid=(m // bc,),
+        in_specs=[spec],
+        out_specs=(s_spec,),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(z)[0]
+
+
+def round_downlink_presummed_2d(x, w, z, y, *, u, damping=1.0,
+                                block_cols=BLOCK_COLS, interpret=True,
+                                emulate=False):
+    """Sharded downlink: z-update + participation selects of one
+    shard's rows, consuming the replicated ``(1, M)`` coordinator point
+    ``y`` from the sharded uplink (no in-kernel chain recompute -- a
+    shard cannot reproduce the cross-device mean locally).  Returns
+    ``(x_new, z_new)``.  ``M % block_cols == 0`` (ops.py pads).
+    """
+    n, m = x.shape
+    bc = min(block_cols, m)
+    if m % bc:
+        raise ValueError(f"column count {m} not a multiple of the "
+                         f"column block {bc} (ops.py pads)")
+    for name, a, shape in [("w", w, x.shape), ("z", z, x.shape),
+                           ("y", y, (1, m)), ("u", u, (n, 1))]:
+        if a.shape != shape:
+            raise ValueError(f"{name} has shape {a.shape}, want {shape}")
+    spec = pl.BlockSpec((n, bc), lambda j: (0, j))
+    y_spec = pl.BlockSpec((1, bc), lambda j: (0, j))
+    u_spec = pl.BlockSpec((n, 1), lambda j: (0, 0))
+    kernel = functools.partial(_downlink_presummed_kernel,
+                               damping=damping)
+    args = (x, w, z, y, u)
+    out_shape = (jax.ShapeDtypeStruct(x.shape, x.dtype),
+                 jax.ShapeDtypeStruct(z.shape, z.dtype))
+    if interpret and bc == m and not emulate:
+        return _direct(kernel, args, out_shape)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bc,),
+        in_specs=[spec, spec, spec, y_spec, u_spec],
         out_specs=(spec, spec),
         out_shape=out_shape,
         interpret=interpret,

@@ -37,3 +37,35 @@ def round_downlink_ref(x, w, z, u, t=None, prox=None, rho_eff=1.0,
     x_new = jnp.where(mask, w, x)
     z_new = jnp.where(mask, z + 2.0 * damping * (w - y[None]), z)
     return x_new, z_new
+
+
+def round_uplink_partial_ref(z):
+    """Local half of the sharded uplink: plain column sums of one
+    shard's rows."""
+    return jnp.sum(z, axis=0, keepdims=True)
+
+
+def round_uplink_sharded_ref(z, t=None, prox=None, rho_eff=1.0,
+                             n_total=None):
+    """The SHARDED uplink formulation on a whole (N, M) buffer:
+    sum -> divide by the global agent count -> prox -> reflection, with
+    the reflection computed from the SHARED y (a shard consumes the
+    replicated coordinator point; it cannot re-fold the chain per
+    consumer the way the unsharded kernel mirrors).  ``n_total``
+    defaults to N."""
+    seen = z if t is None else t
+    n = seen.shape[0] if n_total is None else n_total
+    zbar = jnp.sum(seen, axis=0, keepdims=True) / n
+    y = zbar if prox is None else prox(zbar, rho_eff)
+    return y, 2.0 * y - z
+
+
+def round_downlink_presummed_ref(x, w, z, u, y, damping=1.0):
+    """Sharded downlink: the Krasnosel'skii update + participation
+    selects consuming a REPLICATED coordinator point ``y`` of shape
+    (1, M) -- no chain recompute (a shard cannot reproduce the
+    cross-device mean locally)."""
+    mask = (u != 0).reshape(-1, 1)
+    x_new = jnp.where(mask, w, x)
+    z_new = jnp.where(mask, z + 2.0 * damping * (w - y), z)
+    return x_new, z_new

@@ -68,12 +68,9 @@ def build_case(arch: str, shape_name: str, mesh, mode: str = "fed",
                          for l in jax.tree_util.tree_leaves(params_shape))
 
     if shape.kind == "train" and mode == "fed":
-        if "agent" in axes:        # dedicated agent axis (make_fed_mesh)
-            agent_axis, fsdp_axis = "agent", "data"
-        elif multi_pod:
-            agent_axis, fsdp_axis = "pod", "data"
-        else:
-            agent_axis, fsdp_axis = "data", None
+        # one placement source: sharding.fed_axes / fed_state_specs /
+        # fed_batch_specs (shared with build_trainer)
+        agent_axis, fsdp_axis = sharding.fed_axes(axes)
         n_agents = axes[agent_axis]
         fcfg = runtime.FedConfig(n_agents=n_agents, n_epochs=n_epochs,
                                  tau=1e-3, participation=0.8)
@@ -89,9 +86,8 @@ def build_case(arch: str, shape_name: str, mesh, mode: str = "fed",
         inner_axis = "data" if agent_axis != "data" else None
         batch_shape = jax.eval_shape(
             lambda: _fed_batch_specs(cfg, shape, n_agents))
-        bspec = jax.tree_util.tree_map(
-            lambda l: P(agent_axis, inner_axis,
-                        *([None] * (l.ndim - 2))), batch_shape)
+        bspec = sharding.fed_batch_specs(batch_shape, agent_axis,
+                                         inner_axis)
         fn = lambda state, batch, key: step(state, batch, key)
         args = (state_shape, batch_shape, key_spec)
         shardings_in = (_ns(mesh, state_spec), _ns(mesh, bspec),

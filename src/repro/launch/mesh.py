@@ -21,19 +21,36 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_fed_mesh(n_agents: int = 4, *, multi_pod: bool = False):
-    """Single-pod mesh with a DEDICATED agent axis: (agent, data, model).
+    """Mesh with a DEDICATED agent axis: (agent, data, model).
 
     Beyond-paper optimization (EXPERIMENTS.md Perf, grok iteration): the
     default fed mapping uses the whole 'data' axis as the agent axis,
     which starves 2D-hungry layers (MoE capacity x ff) of a token axis
-    and triggers GSPMD involuntary full rematerialization.  Splitting
-    16 = n_agents x (16 / n_agents) restores it.
+    and triggers GSPMD involuntary full rematerialization.  A dedicated
+    agent axis restores it.
+
+    Shapes are derived from the visible device count (multi-pod doubles
+    the agent extent, mirroring the historical 512-chip layout): the
+    remainder after the agent axis splits into the largest power-of-two
+    'model' extent <= 16, with 'data' taking the rest.
     """
-    assert 16 % n_agents == 0
-    if multi_pod:
-        return jax.make_mesh((2 * n_agents, 16 // n_agents, 16),
-                             ("agent", "data", "model"))
-    return jax.make_mesh((n_agents, 16 // n_agents, 16),
+    if n_agents < 1:
+        raise ValueError(f"n_agents must be >= 1, got {n_agents}")
+    agents = 2 * n_agents if multi_pod else n_agents
+    n_dev = len(jax.devices())
+    if n_dev % agents != 0:
+        raise ValueError(
+            f"fed mesh needs the device count to be divisible by the "
+            f"agent extent {agents} ({'2*' if multi_pod else ''}"
+            f"n_agents), but {n_dev} devices are visible -- on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count to a "
+            f"multiple before importing jax")
+    rest = n_dev // agents
+    model = 1
+    while model < 16 and rest % (model * 2) == 0:
+        model *= 2
+    data = rest // model
+    return jax.make_mesh((agents, data, model),
                          ("agent", "data", "model"))
 
 

@@ -62,6 +62,13 @@ def main():
 
     if args.mode == "fed":
         trainer = api.build_trainer(model, spec)
+        # --agent-shards / --mesh-shape are generated spec flags; the
+        # trainer builds the (agent, model) round mesh from them
+        mesh = getattr(trainer, "mesh", None)
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            print(f"mesh: {sizes} over {mesh.devices.size} devices "
+                  f"(agent axis sharded)")
         if spec.privacy.tau > 0:
             # every DP run states its (eps, delta) position up front
             # make_batch_for splits the global batch across agents

@@ -1,0 +1,402 @@
+"""Mesh-sharded round engine suite (ROADMAP item 2).
+
+Parity contract (see the MESH CONTRACT note in repro/fed/engine.py):
+
+* KERNEL tier, bitwise: the partial-sum / presummed-downlink kernels ==
+  the ref.py oracles on one shard's buffer (jit-vs-jit, like every
+  other kernel suite -- eager refs diverge by FMA contraction, not by
+  math).
+* MESH-OF-1, bitwise: a (1, 1) mesh is the degenerate case of the one
+  sharded code path -- trajectories equal the unsharded engine
+  bit-for-bit on every state_layout x engine_backend x compressor
+  combination.
+* MULTI-DEVICE, fp32 rounding: an 8-way agent mesh reorders the
+  cross-device psum, whose combine order is not host-reproducible --
+  trajectories equal the 1-device run to float32 rounding (rtol=1e-5,
+  atol=1e-6), not bitwise.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import prox as prox_lib
+from repro.core.problem import make_logreg_problem
+from repro.fed import engine
+from repro.fed.api import (AgentGroupSpec, CompressionSpec, FedSpec,
+                           PrivacySpec, build_trainer, spec_from_args)
+from repro.kernels.round_edge import ops, ref
+
+PROX_TABLE = [
+    ("none", None),
+    ("l1", prox_lib.prox_l1),
+    ("weight_decay", prox_lib.make_prox("weight_decay", weight=0.1)),
+    ("elastic_net", prox_lib.make_prox("elastic_net", l1=0.3, l2=0.7)),
+]
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+def _mesh(agents=1, model=1):
+    devs = np.asarray(jax.devices()[:agents * model]).reshape(agents,
+                                                              model)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, ("agent", "model"))
+
+
+def _stack(key, n, m, scale=1.0):
+    return scale * jax.random.normal(key, (n, m))
+
+
+def _assert_trees_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+def _assert_trees_ulp_close(a, b):
+    """Equality to float32 rounding (the multi-device bar)."""
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Kernel tier: the sharded-edge kernels vs the ref.py oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(3, 7), (8, 300), (2, 1000)])
+def test_uplink_partial_matches_ref(n, m):
+    z = _stack(jax.random.PRNGKey(n * m), n, m)
+    s = ops.round_uplink_partial(z)
+    sr = jax.jit(ref.round_uplink_partial_ref)(z)
+    assert s.shape == (1, m)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+@pytest.mark.parametrize("n,m", [(3, 7), (6, 300), (4, 513)])
+def test_downlink_presummed_matches_ref(n, m):
+    key = jax.random.PRNGKey(n + m)
+    x = _stack(key, n, m)
+    w = _stack(jax.random.fold_in(key, 1), n, m)
+    z = _stack(jax.random.fold_in(key, 2), n, m)
+    y = _stack(jax.random.fold_in(key, 3), 1, m)
+    u = jax.random.bernoulli(jax.random.fold_in(key, 4), 0.5,
+                             (n,)).astype(jnp.float32)
+    xn, zn = ops.round_downlink_presummed(x, w, z, y, u, damping=0.65)
+    ref_jit = jax.jit(ref.round_downlink_presummed_ref,
+                      static_argnames=("damping",))
+    xr, zr = ref_jit(x, w, z, u, y, damping=0.65)
+    np.testing.assert_array_equal(np.asarray(xn), np.asarray(xr))
+    np.testing.assert_array_equal(np.asarray(zn), np.asarray(zr))
+
+
+def test_partial_direct_matches_pallas_emulation():
+    z = _stack(jax.random.PRNGKey(2), 5, 384)
+    np.testing.assert_array_equal(
+        np.asarray(ops.round_uplink_partial(z)),
+        np.asarray(ops.round_uplink_partial(z, emulate=True)))
+    y = jnp.mean(z, axis=0, keepdims=True)
+    u = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+    a = ops.round_downlink_presummed(z, z + 1.0, z, y, u, damping=0.5)
+    b = ops.round_downlink_presummed(z, z + 1.0, z, y, u, damping=0.5,
+                                     emulate=True)
+    _assert_trees_equal(a, b)
+
+
+@pytest.mark.parametrize("pname,prox", PROX_TABLE,
+                         ids=[p[0] for p in PROX_TABLE])
+@pytest.mark.parametrize("lagged", [False, True])
+def test_sharded_ops_mesh_of_one_bitwise(pname, prox, lagged):
+    """On a (1, 1) mesh the shard_map composites must equal the sharded
+    oracles AND the unsharded fused kernels bit-for-bit -- one device is
+    the degenerate case of the one sharded code path."""
+    n, m = 6, 300
+    key = jax.random.PRNGKey(7)
+    z = _stack(key, n, m)
+    t = z + 0.1 * _stack(jax.random.fold_in(key, 1), n, m) if lagged \
+        else None
+    mesh = _mesh(1, 1)
+    y, v = ops.round_uplink_sharded(z, t, mesh=mesh, n_total=n,
+                                    prox=prox, rho_eff=0.25)
+    # EAGER oracle: the psum is a fusion barrier between the local sum
+    # and the divide, so the sharded op reproduces the oracle's eager
+    # op-by-op evaluation bitwise (a jitted oracle refolds sum/divide
+    # across that boundary and drifts by 1 ulp)
+    yr, vr = ref.round_uplink_sharded_ref(z, t, prox=prox, rho_eff=0.25)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(yr))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(vr))
+
+    x = _stack(jax.random.fold_in(key, 2), n, m)
+    w = _stack(jax.random.fold_in(key, 3), n, m)
+    u = jax.random.bernoulli(jax.random.fold_in(key, 4), 0.5,
+                             (n,)).astype(jnp.float32)
+    xn, zn = ops.round_downlink_sharded(x, w, z, y, u, mesh=mesh,
+                                        damping=0.65)
+    dref = jax.jit(ref.round_downlink_presummed_ref,
+                   static_argnames=("damping",))
+    xr, zr = dref(x, w, z, u, y, damping=0.65)
+    np.testing.assert_array_equal(np.asarray(xn), np.asarray(xr))
+    np.testing.assert_array_equal(np.asarray(zn), np.asarray(zr))
+
+
+@multi_device
+def test_sharded_ops_multi_device_ulp_close():
+    """Across 8 agent shards the psum's combine order is the device
+    ring's, not the host's -- parity with the whole-buffer oracle is
+    fp32-rounding, and the downlink (purely local rows) stays bitwise
+    given the same y."""
+    n, m = 32, 640
+    key = jax.random.PRNGKey(3)
+    z = _stack(key, n, m)
+    mesh = _mesh(8, 1)
+    prox = prox_lib.prox_l1
+    y, v = ops.round_uplink_sharded(z, mesh=mesh, n_total=n, prox=prox,
+                                    rho_eff=0.3)
+    ref_jit = jax.jit(ref.round_uplink_sharded_ref,
+                      static_argnames=("prox", "rho_eff"))
+    yr, vr = ref_jit(z, prox=prox, rho_eff=0.3)
+    _assert_trees_ulp_close((y, v), (yr, vr))
+
+    x = _stack(jax.random.fold_in(key, 1), n, m)
+    w = _stack(jax.random.fold_in(key, 2), n, m)
+    u = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.5,
+                             (n,)).astype(jnp.float32)
+    xn, zn = ops.round_downlink_sharded(x, w, z, y, u, mesh=mesh,
+                                        damping=0.5)
+    dref = jax.jit(ref.round_downlink_presummed_ref,
+                   static_argnames=("damping",))
+    _assert_trees_equal((xn, zn), dref(x, w, z, u, y, damping=0.5))
+
+
+def test_sharded_edge_launch_count():
+    """On the TPU schedule each shard's round edges are exactly TWO
+    pallas launches: the partial-sum uplink and the presummed downlink
+    (the psum itself is a collective, not a kernel)."""
+    n, m = 8, 4096
+    mesh = _mesh(1, 1)
+
+    def count(jaxpr, name):
+        total = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == name:
+                total += 1
+            for v in eqn.params.values():
+                for vv in (v if isinstance(v, (list, tuple)) else [v]):
+                    inner = getattr(vv, "jaxpr", None)
+                    if inner is not None:
+                        total += count(inner, name)
+                    elif hasattr(vv, "eqns"):
+                        total += count(vv, name)
+        return total
+
+    def tpu_edges(x, w, z, u):
+        y, v = ops.round_uplink_sharded(z, mesh=mesh, n_total=n,
+                                        prox=prox_lib.prox_l1,
+                                        rho_eff=0.2, interpret=False)
+        xn, zn = ops.round_downlink_sharded(x, w, z, y, u, mesh=mesh,
+                                            damping=0.5,
+                                            interpret=False)
+        return v, xn, zn
+
+    z = jnp.zeros((n, m))
+    jaxpr = jax.make_jaxpr(tpu_edges)(z, z, z, jnp.zeros((n,)))
+    assert count(jaxpr.jaxpr, "pallas_call") == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine tier: a 1x1 mesh is the degenerate case of one code path
+# ---------------------------------------------------------------------------
+
+COMPRESSORS = [
+    CompressionSpec("none"),
+    CompressionSpec("topk", ratio=0.3, backend="xla"),
+    CompressionSpec("int8", backend="pallas"),
+]
+
+
+def _dense_run(prob, spec, rounds=5):
+    trainer = build_trainer(prob, spec)
+    state, hist = trainer.run(jax.random.PRNGKey(1), rounds)
+    return state, np.asarray(hist)
+
+
+@pytest.mark.parametrize("layout", ["tree", "packed"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("comp", COMPRESSORS,
+                         ids=[c.name for c in COMPRESSORS])
+def test_mesh_of_one_bitwise_matrix(layout, backend, comp):
+    """Sharded (1x1 mesh) vs unsharded trajectories, bitwise, on every
+    state_layout x engine_backend x compressor combination."""
+    prob = make_logreg_problem(n_agents=6, q=20, dim=12, seed=0)
+    kw = dict(state_layout=layout, engine_backend=backend,
+              compression=comp, n_epochs=2, participation=0.7,
+              damping=0.6)
+    s0, h0 = _dense_run(prob, FedSpec(**kw))
+    s1, h1 = _dense_run(prob, FedSpec(mesh_shape="1x1", **kw))
+    _assert_trees_equal(jax.tree_util.tree_leaves(s0),
+                        jax.tree_util.tree_leaves(s1))
+    np.testing.assert_array_equal(h0, h1)
+
+
+def test_mesh_of_one_bitwise_nonelementwise_prox():
+    """A non-elementwise prox_h cannot fuse; under a mesh it runs the
+    unsharded formula under GSPMD -- still bitwise at 1 device."""
+    prob = make_logreg_problem(n_agents=4, q=20, dim=10, seed=0)
+    kw = dict(state_layout="packed", engine_backend="pallas",
+              prox_h="l2sq", n_epochs=2)
+    s0, h0 = _dense_run(prob, FedSpec(**kw))
+    s1, h1 = _dense_run(prob, FedSpec(agent_shards=1, mesh_shape="1x1",
+                                      **kw))
+    _assert_trees_equal(jax.tree_util.tree_leaves(s0),
+                        jax.tree_util.tree_leaves(s1))
+    np.testing.assert_array_equal(h0, h1)
+
+
+@multi_device
+@pytest.mark.parametrize("layout", ["tree", "packed"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_eight_device_trajectory_ulp_close(layout, backend):
+    """8 agent shards vs 1 device: equal to fp32 rounding (the psum
+    reorders the coordinator reduction)."""
+    prob = make_logreg_problem(n_agents=8, q=20, dim=12, seed=0)
+    kw = dict(state_layout=layout, engine_backend=backend, n_epochs=2,
+              damping=0.7)
+    s0, h0 = _dense_run(prob, FedSpec(**kw))
+    s8, h8 = _dense_run(prob, FedSpec(agent_shards=8, **kw))
+    _assert_trees_ulp_close(jax.tree_util.tree_leaves(s0),
+                            jax.tree_util.tree_leaves(s8))
+    np.testing.assert_allclose(h0, h8, rtol=1e-4, atol=1e-7)
+
+
+@multi_device
+def test_eight_device_model_axis_trajectory():
+    """A 4x2 mesh additionally shards the packed buffer's columns over
+    'model' -- same fp32-rounding bar."""
+    prob = make_logreg_problem(n_agents=8, q=20, dim=12, seed=0)
+    kw = dict(state_layout="packed", engine_backend="pallas", n_epochs=2)
+    s0, h0 = _dense_run(prob, FedSpec(**kw))
+    s4, h4 = _dense_run(prob, FedSpec(mesh_shape="4x2", **kw))
+    _assert_trees_ulp_close(jax.tree_util.tree_leaves(s0),
+                            jax.tree_util.tree_leaves(s4))
+
+
+@multi_device
+def test_async_k0_sharded_matches_sync_sharded_bitwise():
+    """max_staleness=0 async rounds == synchronous rounds bitwise per
+    realization -- the contract must survive the mesh."""
+    prob = make_logreg_problem(n_agents=8, q=20, dim=12, seed=0)
+    kw = dict(state_layout="packed", engine_backend="pallas",
+              agent_shards=8, participation=0.6, n_epochs=2)
+    sync, _ = _dense_run(prob, FedSpec(**kw))
+    stale, _ = _dense_run(prob, FedSpec(async_mode="stale",
+                                        max_staleness=0, **kw))
+    np.testing.assert_array_equal(np.asarray(sync.x),
+                                  np.asarray(stale.x))
+    np.testing.assert_array_equal(np.asarray(sync.z),
+                                  np.asarray(stale.z))
+
+
+@multi_device
+def test_per_agent_privacy_tables_identical_under_mesh():
+    """The Prop. 4 per-agent (eps_i, delta) table is a function of the
+    spec, not the placement -- sharded and unsharded trainers must
+    report identical budgets."""
+    prob = make_logreg_problem(n_agents=8, q=20, dim=10, seed=0)
+    kw = dict(n_epochs=2, privacy=PrivacySpec(tau=0.1, clip=1.0),
+              agent_groups="4*gd:participation=0.5,4*gd")
+    qs = list(range(10, 18))
+    reps = []
+    for extra in ({}, {"agent_shards": 8}):
+        trainer = build_trainer(prob, FedSpec(**kw, **extra))
+        reps.append(trainer.privacy_report(6, qs))
+    a, b = reps
+    assert a.adp_eps == b.adp_eps
+    for ra, rb in zip(a.per_agent, b.per_agent):
+        assert (ra.adp_eps, ra.eps_ceiling) == (rb.adp_eps,
+                                                rb.eps_ceiling)
+
+
+# ---------------------------------------------------------------------------
+# Validation: actionable errors at spec and engine level
+# ---------------------------------------------------------------------------
+
+def test_spec_rejects_non_divisible_agents():
+    with pytest.raises(ValueError, match="not divisible by"):
+        FedSpec(n_agents=6, agent_shards=4).validate()
+
+
+def test_spec_rejects_straddling_groups():
+    with pytest.raises(ValueError, match="straddle"):
+        FedSpec(n_agents=8, agent_shards=4,
+                agent_groups=(AgentGroupSpec(size=3),
+                              AgentGroupSpec(size=5))).validate()
+
+
+def test_spec_rejects_malformed_mesh_shape():
+    with pytest.raises(ValueError, match="AGENTSxMODEL"):
+        FedSpec(mesh_shape="8").validate()
+    with pytest.raises(ValueError, match="integers"):
+        FedSpec(mesh_shape="ax1").validate()
+    with pytest.raises(ValueError, match="disagrees"):
+        FedSpec(agent_shards=2, mesh_shape="4x1").validate()
+
+
+def test_spec_rejects_oversized_mesh():
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="device_count"):
+        FedSpec(n_agents=2 * (n + 1),
+                agent_shards=n + 1).validate().build_mesh()
+
+
+def test_round_config_rejects_bad_shards():
+    with pytest.raises(ValueError, match="agent_shards"):
+        engine.RoundConfig(n_agents=4, agent_shards=0)
+    with pytest.raises(ValueError, match="equal"):
+        engine.RoundConfig(n_agents=6, agent_shards=4)
+
+
+def test_validate_mesh_rejects_shard_mismatch():
+    cfg = engine.RoundConfig(n_agents=8, agent_shards=8)
+    with pytest.raises(ValueError, match="agent_shards=8"):
+        engine.validate_mesh(cfg, _mesh(1, 1))
+
+
+def test_validate_mesh_requires_agent_axis():
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("rows", "cols"))
+    with pytest.raises(ValueError, match="'agent'"):
+        engine.mesh_agent_shards(mesh)
+
+
+@multi_device
+def test_validate_mesh_rejects_straddling_solver_groups():
+    solver = lambda v, k: v  # noqa: E731 -- never called by validation
+    groups = (engine.SolverGroup(3, solver), engine.SolverGroup(5, solver))
+    cfg = engine.RoundConfig(n_agents=8, agent_shards=4)
+    with pytest.raises(ValueError, match="inside an agent shard"):
+        engine.validate_mesh(cfg, _mesh(4, 1), groups)
+    # aligned groups (and 1-row shards, where any cut aligns) pass
+    ok = (engine.SolverGroup(4, solver), engine.SolverGroup(4, solver))
+    engine.validate_mesh(cfg, _mesh(4, 1), ok)
+    engine.validate_mesh(engine.RoundConfig(n_agents=8, agent_shards=8),
+                         _mesh(8, 1), groups)
+
+
+# ---------------------------------------------------------------------------
+# CLI round trip
+# ---------------------------------------------------------------------------
+
+def test_cli_shard_flags_roundtrip():
+    spec = spec_from_args(["--agent-shards", "2"])
+    assert spec.agent_shards == 2 and spec.resolved_agent_shards() == 2
+    spec = spec_from_args(["--mesh-shape", "2x1"])
+    assert spec.mesh_axes() == (2, 1)
+    assert spec_from_args([]).mesh_axes() is None
