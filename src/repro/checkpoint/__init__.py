@@ -1,3 +1,14 @@
-"""Checkpointing: npz leaves + JSON treedef, shard-aware restore."""
+"""Checkpointing: npz leaves + JSON treedef, shard-aware restore.
 
-from repro.checkpoint.io import save_checkpoint, restore_checkpoint  # noqa: F401
+Saves are atomic (tmp-then-rename; see :mod:`repro.checkpoint.io`), so
+a run killed mid-save never leaves a torn checkpoint behind.
+"""
+
+from repro.checkpoint.io import (  # noqa: F401
+    checkpoint_extra,
+    checkpoint_step,
+    find_latest_checkpoint,
+    is_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -3,12 +3,25 @@
 Host-side, framework-free (numpy) so checkpoints survive JAX upgrades;
 restore re-shards onto the current mesh via device_put when given
 shardings.
+
+CRASH SAFETY.  :func:`save_checkpoint` is atomic at the directory
+level: the checkpoint is assembled in a same-filesystem temporary
+sibling (``<name>.ckpt-tmp-*``) -- leaves first, the manifest last,
+fsync'd -- and only then renamed over the target.  A process killed at
+ANY point therefore leaves either the previous complete checkpoint or
+the new complete checkpoint at ``path``, never a torn mix; the worst
+case is a leftover ``*.ckpt-tmp-*`` directory, which
+:func:`find_latest_checkpoint` ignores.  The manifest doubles as the
+commit record: :func:`is_checkpoint` treats a directory without a
+parseable manifest + leaves file as not-a-checkpoint.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 
 import jax
 import numpy as np
@@ -24,28 +37,103 @@ def _flatten(tree):
     return out
 
 
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync (makes the rename durable; some
+    filesystems don't support opening directories -- ignore those)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(path: str, tree, step: int | None = None,
                     extra: dict | None = None):
     """``extra`` is an optional JSON-able dict stored in the manifest --
     e.g. the packed state layout (``packed_layout_manifest``) so a
-    packed-resident run can validate its buffer geometry on restore."""
-    os.makedirs(path, exist_ok=True)
-    flat = _flatten(tree)
-    np.savez(os.path.join(path, "leaves.npz"), **flat)
-    treedef = jax.tree_util.tree_structure(tree)
-    manifest = {"keys": sorted(flat), "step": step,
-                "treedef": str(treedef)}
-    if extra is not None:
-        manifest["extra"] = extra
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    packed-resident run can validate its buffer geometry on restore.
+
+    Atomic: assembled in a temporary sibling and renamed into place
+    (see the module docstring); a kill mid-save never corrupts an
+    existing checkpoint at ``path``.
+    """
+    path = path.rstrip(os.sep)
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    base = os.path.basename(path)
+    # same-directory tmp so the final rename never crosses a filesystem
+    tmp = tempfile.mkdtemp(prefix=base + ".ckpt-tmp-", dir=parent)
+    try:
+        flat = _flatten(tree)
+        np.savez(os.path.join(tmp, "leaves.npz"), **flat)
+        treedef = jax.tree_util.tree_structure(tree)
+        manifest = {"keys": sorted(flat), "step": step,
+                    "treedef": str(treedef)}
+        if extra is not None:
+            manifest["extra"] = extra
+        # the manifest is written LAST and fsync'd: its presence is the
+        # commit record (is_checkpoint requires it to parse)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(path):
+            # swap dance: move the old checkpoint aside, promote the
+            # new one, then drop the old; a failure mid-swap restores
+            # the old checkpoint at ``path``
+            trash = tempfile.mkdtemp(prefix=base + ".ckpt-tmp-old-",
+                                     dir=parent)
+            old = os.path.join(trash, "old")
+            os.rename(path, old)
+            try:
+                os.rename(tmp, path)
+            except OSError:
+                os.rename(old, path)
+                raise
+            finally:
+                shutil.rmtree(trash, ignore_errors=True)
+        else:
+            os.rename(tmp, path)
+        _fsync_dir(parent)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
 
 
 def restore_checkpoint(path: str, like, shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs).  Optionally device_put with ``shardings``."""
+    ShapeDtypeStructs).  Optionally device_put with ``shardings``.
+
+    The stored key set is validated against ``like`` up front: missing
+    and unexpected leaf keys are reported together in ONE ValueError,
+    so a layout/model mismatch reads as a diff instead of a KeyError
+    on whichever leaf happened to flatten first."""
     data = np.load(os.path.join(path, "leaves.npz"))
     flat_like = jax.tree_util.tree_flatten_with_path(like)
+    want = {}
+    for path_k, leaf in flat_like[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_k)
+        want[key] = leaf
+    have = set(data.files)
+    missing = sorted(set(want) - have)
+    extra_keys = sorted(have - set(want))
+    if missing or extra_keys:
+        parts = []
+        if missing:
+            parts.append("missing from checkpoint: "
+                         + ", ".join(missing))
+        if extra_keys:
+            parts.append("unexpected in checkpoint: "
+                         + ", ".join(extra_keys))
+        raise ValueError(
+            f"checkpoint at {path!r} does not match the restore "
+            f"target ({'; '.join(parts)})")
     leaves = []
     for path_k, leaf in flat_like[0]:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -71,6 +159,48 @@ def checkpoint_extra(path: str) -> dict | None:
     without one)."""
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f).get("extra")
+
+
+def is_checkpoint(path: str) -> bool:
+    """True iff ``path`` holds a COMMITTED checkpoint: a parseable
+    manifest plus the leaves file (a torn or in-flight tmp directory
+    fails this)."""
+    if not os.path.isdir(path):
+        return False
+    if not os.path.exists(os.path.join(path, "leaves.npz")):
+        return False
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return False
+    return True
+
+
+def find_latest_checkpoint(root: str) -> str | None:
+    """The newest committed checkpoint directory under ``root``.
+
+    "Newest" = highest manifest ``step`` (name as tie-break, so
+    zero-padded ``step-%06d`` names order correctly even without
+    steps).  In-flight / leftover ``*.ckpt-tmp-*`` directories and
+    anything failing :func:`is_checkpoint` are skipped.  ``root``
+    itself qualifies when it is directly a checkpoint."""
+    if is_checkpoint(root):
+        return root
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for name in sorted(os.listdir(root)):
+        if ".ckpt-tmp-" in name:
+            continue
+        cand = os.path.join(root, name)
+        if not is_checkpoint(cand):
+            continue
+        step = checkpoint_step(cand)
+        key = (step if step is not None else -1, name)
+        if best is None or key > best[0]:
+            best = (key, cand)
+    return None if best is None else best[1]
 
 
 def packed_layout_manifest(meta) -> dict:

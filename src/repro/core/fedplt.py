@@ -77,6 +77,11 @@ class FedPLTConfig:
     # max_staleness=0 reproduces the synchronous engine bitwise)
     async_mode: str = "off"
     max_staleness: int = 0
+    # in-jit increment guards (fault tolerance): screen each agent's
+    # local-solve row at the uplink -- non-finite / over-norm rows
+    # become non-arrivals instead of poisoning the consensus mean
+    guard_increments: bool = False
+    guard_norm_bound: float = float("inf")
 
     def to_spec(self, n_agents: Optional[int] = None):
         """The equivalent :class:`repro.fed.api.FedSpec` (the front-door
@@ -104,7 +109,9 @@ class FedPLTConfig:
             engine_backend=self.engine_backend,
             state_layout=self.state_layout,
             async_mode=self.async_mode,
-            max_staleness=self.max_staleness)
+            max_staleness=self.max_staleness,
+            guard_increments=self.guard_increments,
+            guard_norm_bound=self.guard_norm_bound)
 
 
 class FedPLT:
@@ -162,7 +169,9 @@ class FedPLT:
             staleness=engine.StalenessConfig(
                 mode=config.async_mode,
                 max_staleness=config.max_staleness),
-            agent_shards=engine.mesh_agent_shards(mesh))
+            agent_shards=engine.mesh_agent_shards(mesh),
+            guard_increments=config.guard_increments,
+            guard_norm_bound=config.guard_norm_bound)
         # packed layout: the dense state is single-leaf, so its resident
         # (N, n) buffer IS the stacked array (pack_leaves fast path, no
         # lane padding) -- the meta is pure shape arithmetic and the
@@ -274,11 +283,15 @@ class FedPLT:
 
         return solver
 
-    def _round_core(self, state: FedPLTState, arrival=None):
+    def _round_core(self, state: FedPLTState, arrival=None,
+                    corrupt=None, live=None):
         """One round; returns ``(next_state, u)`` with ``u`` the round's
         realized (N,) participation / arrival mask.  ``arrival``
         (async mode only) substitutes a recorded schedule row for the
-        Bernoulli draw -- the broker replay path."""
+        Bernoulli draw -- the broker replay path.  ``corrupt`` / ``live``
+        are broker-realized fault rows (corruption injection / eviction
+        masks; see :func:`repro.fed.engine.round_step`) and work in both
+        synchrony modes."""
         compressed = self._ecfg.compressed
         t = state.t if compressed else state.z
         if self._ecfg.staleness.enabled:
@@ -291,7 +304,8 @@ class FedPLT:
             res = step(self._ecfg, *extra, state.x, state.z, t,
                        state.y_tag, state.staleness, state.key,
                        self._solvers, prox_h=self.prox_h,
-                       arrival=arrival, mesh=self.mesh)
+                       arrival=arrival, mesh=self.mesh,
+                       corrupt=corrupt, live=live)
             y = res.y.reshape(-1) if self._meta is not None else res.y
             return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
                                k=state.k + 1,
@@ -305,12 +319,14 @@ class FedPLT:
         if self._meta is not None:
             res = engine.packed_round_step(
                 self._ecfg, self._meta, state.x, state.z, t, state.key,
-                self._solvers, prox_h=self.prox_h, mesh=self.mesh)
+                self._solvers, prox_h=self.prox_h, mesh=self.mesh,
+                corrupt=corrupt, live=live)
             y = res.y.reshape(-1)   # (1, n) coordinator buffer -> (n,)
         else:
             res = engine.round_step(self._ecfg, state.x, state.z, t,
                                     state.key, self._solvers,
-                                    prox_h=self.prox_h, mesh=self.mesh)
+                                    prox_h=self.prox_h, mesh=self.mesh,
+                                    corrupt=corrupt, live=live)
             y = res.y
         return FedPLTState(x=res.x, z=res.z, y=y, key=res.next_key,
                            k=state.k + 1,
@@ -328,6 +344,18 @@ class FedPLT:
         optionally replaces the arrival draw with a recorded (N,) 0/1
         row (async mode) -- the broker's numerics entry point."""
         return self._round_arrival(state, arrival)
+
+    def round_with_faults(self, state: FedPLTState, arrival=None,
+                          corrupt=None, live=None):
+        """One jitted round returning ``(next_state, u)`` with the full
+        broker override set: ``arrival`` (recorded schedule row, async
+        mode), ``corrupt`` (per-agent corruption multipliers applied to
+        the solver output) and ``live`` (0/1 eviction mask; the
+        coordinator averages over survivors).  The fault-capable broker
+        entry point -- e.g.
+        ``lambda s, u, c, l: algo.round_with_faults(s, u, c, l)[0]``.
+        All-None reproduces :meth:`round_with_arrival` bitwise."""
+        return self._round_arrival(state, arrival, corrupt, live)
 
     def run(self, key: jax.Array, n_rounds: int):
         """Run ``n_rounds`` rounds; returns (final_state, criterion_history).

@@ -272,6 +272,19 @@ class FedSpec:
         flag="--max-staleness", arg_type=int,
         help="staleness bound K: an agent holding K-round-old work is "
              "forced to arrive (0 = synchronous semantics)"))
+    # in-jit increment guards (fault tolerance): screen every agent's
+    # uplink row for non-finite values (and, when guard_norm_bound is
+    # finite, for norm above the bound) and convert a failing row into a
+    # NON-ARRIVAL this round -- a bitwise no-op when every row is clean.
+    guard_increments: bool = dataclasses.field(default=False, metadata=_cli(
+        flag="--guard-increments",
+        help="screen agent increments in-jit: a non-finite (or "
+             "over-norm) uplink row becomes a non-arrival this round"))
+    guard_norm_bound: float = dataclasses.field(
+        default=float("inf"), metadata=_cli(
+            flag="--guard-norm-bound", arg_type=float,
+            help="l2 norm bound for --guard-increments (inf = "
+                 "finiteness-only screen)"))
     # sharded rounds (engine mesh contract): shard the agent axis of
     # every per-agent carrier across this many devices.  1 = unsharded;
     # a 1-device mesh reproduces the unsharded trajectory bitwise.
@@ -361,7 +374,9 @@ class FedSpec:
             engine_backend=self.engine_backend,
             state_layout=self.state_layout,
             staleness=self.staleness_config(),
-            agent_shards=self.resolved_agent_shards())
+            agent_shards=self.resolved_agent_shards(),
+            guard_increments=self.guard_increments,
+            guard_norm_bound=self.guard_norm_bound)
 
     def staleness_config(self) -> engine.StalenessConfig:
         """The engine :class:`repro.fed.engine.StalenessConfig` this
@@ -501,6 +516,9 @@ class FedSpec:
                 f"unknown state layout {self.state_layout!r}; "
                 f"known: {', '.join(engine.ENGINE_LAYOUTS)}")
         self.staleness_config()     # bad mode / bound -> ValueError
+        if not self.guard_norm_bound > 0.0:   # also rejects NaN
+            raise ValueError("guard_norm_bound must be positive (use "
+                             "inf for a finiteness-only screen)")
         if self.weight_decay < 0.0:
             raise ValueError("weight_decay must be >= 0")
         if self.weight_decay != 0.0 and self.prox_h not in (
@@ -611,7 +629,9 @@ class FedSpec:
             state_layout=self.state_layout,
             damping=self.damping,
             async_mode=self.async_mode,
-            max_staleness=self.max_staleness)
+            max_staleness=self.max_staleness,
+            guard_increments=self.guard_increments,
+            guard_norm_bound=self.guard_norm_bound)
 
 
 def as_spec(cfg: Any) -> FedSpec:
@@ -881,6 +901,14 @@ class DenseTrainer(FedTrainer):
         model (bit-identical to the run that recorded it)."""
         return self.algo.replay(key, schedule)
 
+    def round_with_faults(self, state, arrival=None, corrupt=None,
+                          live=None):
+        """One round under broker-supplied fault overrides: ``arrival``
+        (N,) 0/1 row, ``corrupt`` (N,) per-agent corruption multipliers
+        (0 = clean), ``live`` (N,) 0/1 survivor mask.  All None
+        reproduces :meth:`step` bitwise."""
+        return self.algo.round_with_faults(state, arrival, corrupt, live)
+
     def consensus(self, state):
         return self.algo.x_bar(state)
 
@@ -957,11 +985,15 @@ class ModelTrainer(FedTrainer):
             return state
         return jax.device_put(state, self._state_shardings())
 
-    def step(self, state, batch, key: jax.Array, arrival=None):
+    def step(self, state, batch, key: jax.Array, arrival=None,
+             corrupt=None, live=None):
         """One jitted Fed-PLT round on an agent-stacked batch.
         ``arrival`` (async mode) replaces the arrival draw with a
-        recorded (N,) 0/1 schedule row -- broker numerics / replay."""
-        return self._step(state, batch, key, arrival)
+        recorded (N,) 0/1 schedule row -- broker numerics / replay.
+        ``corrupt`` / ``live`` are the broker's fault overrides (see
+        :mod:`repro.fed.broker`): per-agent corruption multipliers and
+        the survivor mask after evictions."""
+        return self._step(state, batch, key, arrival, corrupt, live)
 
     def run(self, key: jax.Array, n_rounds: int, batches):
         """Run from a fresh init.  ``batches`` is either a callable

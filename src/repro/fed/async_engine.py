@@ -145,25 +145,35 @@ def forced_arrivals(staleness: jnp.ndarray, max_staleness: int) \
 
 def arrival_mask(key: jax.Array, cfg: RoundConfig,
                  staleness: jnp.ndarray,
-                 arrival: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                 arrival: Optional[jnp.ndarray] = None,
+                 live=None) -> jnp.ndarray:
     """The round's realized (N,) float arrival mask: the Bernoulli
     participation draw (or an externally realized schedule row --
-    broker runs and replays) OR-ed with the forced arrivals."""
+    broker runs and replays) OR-ed with the forced arrivals.  An
+    eviction ``live`` row zeroes dead agents AFTER the forcing term --
+    an evicted agent neither draws nor is forced in."""
     if arrival is None:
         draw = engine.participation_mask(key, cfg)
     else:
         draw = jnp.asarray(arrival, jnp.float32).reshape(-1)
     forced = forced_arrivals(staleness, cfg.staleness.max_staleness)
-    return jnp.maximum(draw, forced.astype(jnp.float32))
+    return engine.live_mask_rows(
+        jnp.maximum(draw, forced.astype(jnp.float32)), live)
 
 
 def _advance_staleness(staleness: jnp.ndarray, u: jnp.ndarray,
-                       max_staleness: int) -> jnp.ndarray:
+                       max_staleness: int, live=None) -> jnp.ndarray:
     """Arrivals reset to 0; pending work below the bound ages by one;
     a miss AT the bound (only reachable at K = 0, where the bound
-    forces every stale agent in) stays -- its work was discarded."""
+    forces every stale agent in) stays -- its work was discarded.
+    Evicted agents (``live`` row 0) are pinned at 0: their pending work
+    is abandoned, and a later rejoin starts them fresh."""
     aged = jnp.where(staleness < max_staleness, staleness + 1, staleness)
-    return jnp.where(u != 0, jnp.zeros_like(staleness), aged)
+    out = jnp.where(u != 0, jnp.zeros_like(staleness), aged)
+    if live is not None:
+        out = jnp.where(jnp.asarray(live).reshape(-1) != 0, out,
+                        jnp.zeros_like(out))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +185,7 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
                      local_solver: SolverAssignment,
                      prox_h: ProxH = None,
                      arrival: Optional[jnp.ndarray] = None,
-                     mesh=None) -> AsyncRoundResult:
+                     mesh=None, corrupt=None, live=None) -> AsyncRoundResult:
     """One bounded-staleness round on agent-stacked pytrees (module
     contract above).  Mirrors :func:`repro.fed.engine.round_step`'s key
     schedule and edge formulas exactly; ``arrival`` optionally replaces
@@ -184,13 +194,22 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
     carrier (``y_tag``, ``staleness``, the arrival rows) shards on the
     agent axis with the state; the staleness selects between the edges
     are per-row elementwise, so GSPMD shards them transparently (mesh
-    contract in :mod:`repro.fed.engine`)."""
+    contract in :mod:`repro.fed.engine`).
+
+    ``corrupt`` / ``live`` are broker-realized fault rows (see
+    :func:`repro.fed.engine.round_step`): corrupted increments are
+    screened by the guard into non-arrivals AND excluded from the keep
+    branch (poisoned local progress is discarded, not carried); evicted
+    agents leave the coordinator mean, the arrival draw, and the keep
+    branch until a rejoin."""
     if mesh is not None:
         engine.validate_mesh(cfg, mesh, local_solver)
     key, k_part, k_solve = jax.random.split(key, 3)
 
-    # -- coordinator edge: identical to the synchronous round -----------
+    # -- coordinator edge: identical to the synchronous round (with the
+    # survivor rescale when agents were evicted) ------------------------
     z_seen = t if cfg.compressed else z
+    z_seen = engine.survivor_mean_input(cfg, z_seen, live)
     y, v_fresh = engine.coordinator_edge(cfg, z, z_seen, prox_h, mesh)
 
     # -- training targets: fresh agents pull this round's reflection,
@@ -206,9 +225,12 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
     # -- every agent trains, warm-started at its current x --------------
     w, aux = engine.run_solvers(local_solver, x, v_eff, k_solve,
                                 cfg.n_agents)
+    w = engine.apply_corruption(w, corrupt)
 
-    # -- arrivals: the participation draw + the hard staleness bound ----
-    u = arrival_mask(k_part, cfg, staleness, arrival)
+    # -- arrivals: the participation draw + the hard staleness bound,
+    # screened by the increment guard (a corrupt row is a non-arrival) --
+    u = arrival_mask(k_part, cfg, staleness, arrival, live)
+    u, ok = engine.increment_guard(cfg, w, u)
 
     # -- synchronous downlink edge with the arrival mask streamed like
     # the participation mask (fused kernel path unchanged) --------------
@@ -224,11 +246,18 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
         z, w, y_tag)
     z_new = _select(stale_arrival, z_tagged, z_upd)
 
-    # -- stragglers below the bound keep their local progress -----------
+    # -- stragglers below the bound keep their local progress; a
+    # quarantined (corrupt) or evicted agent must NOT -- keeping a
+    # poisoned w would carry the corruption into the next round ---------
     keep = (~arrived) & (staleness < cfg.staleness.max_staleness)
+    if live is not None:
+        keep = keep & (jnp.asarray(live).reshape(-1) != 0)
+    if ok is not None:
+        keep = keep & ok
     x_new = _select(keep, w, x_upd)
 
-    s_new = _advance_staleness(staleness, u, cfg.staleness.max_staleness)
+    s_new = _advance_staleness(staleness, u, cfg.staleness.max_staleness,
+                               live)
 
     # -- compressed uplink: only arrived increments are transmitted -----
     if cfg.compressed:
@@ -255,7 +284,8 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
                             local_solver: SolverAssignment,
                             prox_h: ProxH = None,
                             arrival: Optional[jnp.ndarray] = None,
-                            mesh=None) -> AsyncRoundResult:
+                            mesh=None, corrupt=None,
+                            live=None) -> AsyncRoundResult:
     """:func:`async_round_step` on the RESIDENT ``(N, width)`` buffers
     (engine layout contract): ``y_tag`` is an ``(N, width)`` buffer and
     ``y`` comes back ``(1, width)``.  Same arithmetic per column, so
@@ -268,6 +298,7 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     key, k_part, k_solve = jax.random.split(key, 3)
 
     z_seen = t if cfg.compressed else z
+    z_seen = engine.survivor_mean_input(cfg, z_seen, live)
     y, v_fresh = engine.coordinator_edge_packed(cfg, z, z_seen, meta,
                                                 prox_h, mesh)
 
@@ -277,8 +308,10 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
 
     w, aux = engine.run_solvers(local_solver, x, v_eff, k_solve,
                                 cfg.n_agents)
+    w = engine.apply_corruption(w, corrupt)
 
-    u = arrival_mask(k_part, cfg, staleness, arrival)
+    u = arrival_mask(k_part, cfg, staleness, arrival, live)
+    u, ok = engine.increment_guard(cfg, w, u, meta)
 
     x_upd, z_upd = engine.agent_edge_packed(cfg, u, w, x, z, y, z_seen,
                                             prox_h, mesh)
@@ -288,11 +321,15 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     z_tagged = z + 2.0 * cfg.damping * (w - y_tag)
     z_new = jnp.where(stale_arrival, z_tagged, z_upd)
 
-    keep = ((~arrived)
-            & (staleness < cfg.staleness.max_staleness)).reshape(-1, 1)
-    x_new = jnp.where(keep, w, x_upd)
+    keep = (~arrived) & (staleness < cfg.staleness.max_staleness)
+    if live is not None:
+        keep = keep & (jnp.asarray(live).reshape(-1) != 0)
+    if ok is not None:
+        keep = keep & ok
+    x_new = jnp.where(keep.reshape(-1, 1), w, x_upd)
 
-    s_new = _advance_staleness(staleness, u, cfg.staleness.max_staleness)
+    s_new = _advance_staleness(staleness, u, cfg.staleness.max_staleness,
+                               live)
 
     if cfg.compressed:
         q = compress_lib.compress_increment_packed(z_new - t, meta, cfg)
@@ -310,7 +347,7 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
 # privacy composition (and broker-schedule validation)
 # ---------------------------------------------------------------------------
 
-def effective_counts(schedule, max_staleness: int) \
+def effective_counts(schedule, max_staleness: int, live=None) \
         -> Tuple[np.ndarray, np.ndarray]:
     """Per-agent effective composition of a realized arrival schedule.
 
@@ -327,41 +364,72 @@ def effective_counts(schedule, max_staleness: int) \
       released information only.
 
     This replays :func:`_advance_staleness` on the host, so the counts
-    agree with what the in-jit model realized."""
+    agree with what the in-jit model realized.  ``live`` (an optional
+    ``(R, N)`` 0/1 liveness matrix from a faulty run's ``FaultRecord``)
+    pins evicted agents' counters at 0 the same way the in-jit model
+    does; released-round charges from BEFORE an eviction are kept --
+    that information left the agent, so DP must still pay for it."""
     sched = np.asarray(schedule)
     if sched.ndim != 2:
         raise ValueError(f"schedule must be (n_rounds, n_agents), got "
                          f"shape {sched.shape}")
+    lv = _check_live(live, sched.shape)
     r_rounds, n = sched.shape
     s = np.zeros(n, np.int64)
     arrivals = np.zeros(n, np.int64)
     released = np.zeros(n, np.int64)
     for r in range(r_rounds):
         u = sched[r] != 0
+        if lv is not None:
+            u = u & (lv[r] != 0)
         arrivals += u
         released += np.where(u, s + 1, 0)
         s = np.where(u, 0,
                      np.where(s < max_staleness, s + 1, s))
+        if lv is not None:
+            s = np.where(lv[r] != 0, s, 0)
     return arrivals, released
 
 
-def validate_schedule(schedule, max_staleness: int) -> None:
+def _check_live(live, shape) -> Optional[np.ndarray]:
+    if live is None:
+        return None
+    lv = np.asarray(live)
+    if lv.shape != tuple(shape):
+        raise ValueError(f"live matrix shape {lv.shape} does not match "
+                         f"schedule shape {tuple(shape)}")
+    return lv
+
+
+def validate_schedule(schedule, max_staleness: int, live=None) -> None:
     """Raise ValueError when a schedule violates the hard bound: an
     agent may never hold work more than ``max_staleness`` rounds old
     when increments are pending (the in-jit model would force such an
-    arrival; a recorded schedule claiming otherwise is corrupt)."""
+    arrival; a recorded schedule claiming otherwise is corrupt).  With
+    a ``live`` matrix (faulty runs), evicted agents are exempt from the
+    bound while dead -- their pending work was abandoned, not held --
+    but an arrival from a dead agent is itself a violation."""
     sched = np.asarray(schedule)
     if sched.ndim != 2:
         raise ValueError(f"schedule must be (n_rounds, n_agents), got "
                          f"shape {sched.shape}")
+    lv = _check_live(live, sched.shape)
     n = sched.shape[1]
     s = np.zeros(n, np.int64)
     for r, row in enumerate(sched):
         u = row != 0
-        over = (~u) & (s >= max_staleness) & (s > 0)
+        alive = np.ones(n, bool) if lv is None else (lv[r] != 0)
+        ghost = u & ~alive
+        if ghost.any():
+            raise ValueError(
+                f"schedule is inconsistent with the live matrix: agents "
+                f"{np.nonzero(ghost)[0].tolist()} arrive in round {r} "
+                f"while evicted")
+        over = (~u) & (s >= max_staleness) & (s > 0) & alive
         if over.any():
             raise ValueError(
                 f"schedule violates max_staleness={max_staleness}: "
                 f"agents {np.nonzero(over)[0].tolist()} miss round {r} "
                 f"while holding work {int(s[over].max())} rounds old")
         s = np.where(u, 0, np.where(s < max_staleness, s + 1, s))
+        s = np.where(alive, s, 0)

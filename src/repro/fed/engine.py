@@ -127,6 +127,7 @@ from typing import (Any, Callable, Dict, NamedTuple, Optional, Sequence,
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -300,6 +301,15 @@ class RoundConfig:
     # module docstring); 1 = unsharded.  Every shard owns
     # n_agents/agent_shards agents, so N must divide evenly
     agent_shards: int = 1
+    # in-jit increment guards (fault tolerance): when enabled, each
+    # agent row of the local-solve result is screened at the uplink --
+    # a non-finite row (NaN/Inf), or one whose l2 norm exceeds
+    # guard_norm_bound, is converted into a NON-ARRIVAL (u_i -> 0, the
+    # quarantine row), so one corrupt increment cannot poison the
+    # consensus mean.  With every row clean the guard multiplies u by
+    # an all-ones mask: trajectories are bitwise unchanged
+    guard_increments: bool = False
+    guard_norm_bound: float = float("inf")   # inf = finiteness-only screen
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
@@ -333,6 +343,14 @@ class RoundConfig:
                 f"contiguous row block of the agent axis -- choose "
                 f"n_agents a multiple of the shard count (or reduce "
                 f"agent_shards)")
+        object.__setattr__(self, "guard_increments",
+                           bool(self.guard_increments))
+        bound = _numeric_scalar("guard_norm_bound", self.guard_norm_bound)
+        if not bound > 0.0:   # rejects 0, negatives, and NaN
+            raise ValueError(
+                f"guard_norm_bound must be > 0 (inf disables the norm "
+                f"screen), got {bound}")
+        object.__setattr__(self, "guard_norm_bound", bound)
         if self.staleness is None:
             object.__setattr__(self, "staleness", StalenessConfig())
         elif not isinstance(self.staleness, StalenessConfig):
@@ -428,6 +446,109 @@ def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
                          nl, ol)
 
     return tree_map(mix, new, old)
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: corruption injection, in-jit increment guards, and the
+# survivor mean (live masks).  All three are BITWISE NO-OPS when disabled
+# (corrupt=None / guards off / live=None) -- the fault-free graph is the
+# historical graph, which is what keeps clean trajectories replayable
+# against recordings made before this layer existed.
+# ---------------------------------------------------------------------------
+
+def apply_corruption(w: Any, corrupt) -> Any:
+    """Inject a recorded corruption row into the solver output.
+
+    ``corrupt`` is the broker-realized ``(N,)`` row: agent ``i``'s row
+    of every leaf is multiplied by ``corrupt[i]`` wherever the entry is
+    non-zero-or-NaN (NaN multipliers poison the row to NaN, Inf to Inf,
+    a huge finite value trips the norm guard); zero entries leave the
+    row untouched.  ``None`` returns ``w`` unchanged.  This is the
+    numerics half of a ``FaultPlan`` ``corrupt`` event: the broker only
+    RECORDS the row (timing side), the jitted round applies it here, so
+    replaying the row reproduces the corruption bit-for-bit."""
+    if corrupt is None:
+        return w
+    c = jnp.asarray(corrupt, jnp.float32).reshape(-1)
+    flagged = c != 0.0        # NaN != 0 is True: NaN rows are flagged
+
+    def poison(l):
+        shape = (-1,) + (1,) * (l.ndim - 1)
+        return jnp.where(flagged.reshape(shape),
+                         l * c.astype(l.dtype).reshape(shape), l)
+
+    return tree_map(poison, w)
+
+
+def _row_sq_norms(w: Any, meta=None) -> jnp.ndarray:
+    """Per-agent squared l2 norm over the non-agent axes, in float32.
+    For a resident packed buffer pass ``meta``: lane-padding columns are
+    zeroed BEFORE squaring (NaN * 0 is NaN -- masking after the square
+    would let drifted padding state trip the guard)."""
+    leaves = jax.tree_util.tree_leaves(w)
+    if meta is not None and len(leaves) == 1:
+        buf = leaves[0]
+        mask = np.zeros((buf.shape[-1],), bool)
+        for a, b in meta.segments:
+            mask[a:b] = True
+        vals = buf if mask.all() else jnp.where(
+            jnp.asarray(mask)[None, :], buf, 0.0)
+        return jnp.sum(jnp.square(vals.astype(jnp.float32)), axis=1)
+    total = None
+    for l in leaves:
+        sq = jnp.sum(jnp.square(l.astype(jnp.float32)),
+                     axis=tuple(range(1, l.ndim)))
+        total = sq if total is None else total + sq
+    return total
+
+
+def increment_guard(cfg: RoundConfig, w: Any, u: jnp.ndarray, meta=None
+                    ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """The in-jit uplink screen: returns ``(u_guarded, ok)`` where
+    ``ok`` is the per-agent ``(N,)`` bool clean mask (``None`` when
+    guards are off).  A corrupt row -- non-finite, or l2 norm above
+    ``cfg.guard_norm_bound`` -- becomes a NON-ARRIVAL: ``u_i -> 0``,
+    exactly as if the agent had not arrived, and the NaN-safe
+    ``jnp.where`` selects downstream keep the poison out of
+    ``(x, z, t)``.  With every row clean ``u * ok`` multiplies by ones,
+    so guarded clean rounds are bitwise identical to unguarded ones."""
+    if not cfg.guard_increments:
+        return u, None
+    sq = _row_sq_norms(w, meta)
+    ok = jnp.isfinite(sq)
+    if np.isfinite(cfg.guard_norm_bound):
+        ok = ok & (sq <= jnp.float32(cfg.guard_norm_bound) ** 2)
+    return u * ok.astype(u.dtype), ok
+
+
+def survivor_mean_input(cfg: RoundConfig, z_seen: Any, live) -> Any:
+    """Fold an eviction ``live`` row into the coordinator's input so the
+    engine's fixed mean-over-N becomes the mean over SURVIVORS:
+    ``z * live * (N / n_live)`` sums to ``sum_live(z)`` and the edges
+    divide by N downstream, i.e. ``mean_live(z)``; dead rows contribute
+    exact zeros.  Premultiplying here -- rather than teaching every
+    uplink a second mask -- is what makes survivor averaging work on
+    every layout x backend x mesh combo without touching a kernel: the
+    scaled buffer is simply not ``z``, so the lagged ``z_seen`` path
+    engages everywhere (including the fused downlink, which recomputes
+    the coordinator chain from the SAME scaled input).  ``live=None``
+    returns ``z_seen`` unchanged -- the historical graph."""
+    if live is None:
+        return z_seen
+    lv = jnp.asarray(live, jnp.float32).reshape(-1)
+    scale = lv * (cfg.n_agents / jnp.sum(lv))
+    return tree_map(
+        lambda l: l * scale.astype(l.dtype).reshape(
+            (-1,) + (1,) * (l.ndim - 1)),
+        z_seen)
+
+
+def live_mask_rows(u: jnp.ndarray, live) -> jnp.ndarray:
+    """Zero the arrival/participation row of evicted agents (``live``
+    an ``(N,)`` 0/1 row; None = everyone live, returned unchanged)."""
+    if live is None:
+        return u
+    return u * jnp.asarray(live, u.dtype).reshape(-1)
 
 
 # ---------------------------------------------------------------------------
@@ -806,7 +927,8 @@ def agent_edge_packed(cfg: RoundConfig, u: jnp.ndarray, w: jnp.ndarray,
 def packed_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
                       z: jnp.ndarray, t: jnp.ndarray, key: jax.Array,
                       local_solver: SolverAssignment,
-                      prox_h: ProxH = None, mesh=None) -> RoundResult:
+                      prox_h: ProxH = None, mesh=None,
+                      corrupt=None, live=None) -> RoundResult:
     """One Fed-PLT round on the RESIDENT packed state: ``x``/``z``/``t``
     are ``(N, width)`` buffers laid out by ``meta`` (a static
     :class:`repro.fed.compress.PackedMeta`), and the returned
@@ -819,17 +941,24 @@ def packed_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     it with :func:`repro.fed.solvers.make_packed_local_solver` (or wrap
     a tree solver with :func:`repro.fed.solvers.wrap_packed_solver`).
     :func:`run_solvers` works unchanged -- a buffer is a pytree, group
-    slicing is row slicing."""
+    slicing is row slicing.
+
+    ``corrupt`` / ``live`` are broker-realized fault rows (see
+    :func:`round_step`); ``None`` for both keeps the historical graph.
+    """
     if mesh is not None:
         validate_mesh(cfg, mesh, local_solver)
     key, k_part, k_solve = jax.random.split(key, 3)
 
     z_seen = t if cfg.compressed else z
+    z_seen = survivor_mean_input(cfg, z_seen, live)
     y, v = coordinator_edge_packed(cfg, z, z_seen, meta, prox_h, mesh)
 
     w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
+    w = apply_corruption(w, corrupt)
 
-    u = participation_mask(k_part, cfg)
+    u = live_mask_rows(participation_mask(k_part, cfg), live)
+    u, _ok = increment_guard(cfg, w, u, meta)
     x_new, z_new = agent_edge_packed(cfg, u, w, x, z, y, z_seen, prox_h,
                                      mesh)
 
@@ -925,7 +1054,8 @@ def run_solvers(local_solver: SolverAssignment, x: Any, v: Any,
 
 def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
                local_solver: SolverAssignment,
-               prox_h: ProxH = None, mesh=None) -> RoundResult:
+               prox_h: ProxH = None, mesh=None,
+               corrupt=None, live=None) -> RoundResult:
     """One Fed-PLT round on agent-stacked pytrees.
 
     ``t`` is the coordinator's copy of ``z`` (pass ``z`` itself when the
@@ -934,6 +1064,13 @@ def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
     solver).  ``local_solver`` is one solver for every agent or a
     sequence of :class:`SolverGroup` partitioning the agent axis (see
     :func:`run_solvers`).
+
+    ``corrupt`` / ``live`` are broker-realized fault rows: ``corrupt``
+    multiplies flagged agents' solver output (:func:`apply_corruption`,
+    screened by :func:`increment_guard` when enabled), ``live`` drops
+    evicted agents from both the participation draw and the coordinator
+    mean (:func:`survivor_mean_input`).  ``None`` for both keeps the
+    historical graph bitwise.
     """
     if mesh is not None:
         validate_mesh(cfg, mesh, local_solver)
@@ -941,15 +1078,19 @@ def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
 
     # -- coordinator edge: prox of the mean of the *transmitted* copies
     # when the exchange is compressed (t_i), else the exact z_i (Lemma
-    # 6), fused with the reflection ------------------------------------
+    # 6), fused with the reflection; evictions rescale the input so the
+    # mean runs over survivors only ------------------------------------
     z_seen = t if cfg.compressed else z
+    z_seen = survivor_mean_input(cfg, z_seen, live)
     y, v = coordinator_edge(cfg, z, z_seen, prox_h, mesh)
 
     # -- agents: warm-started local training on the reflected states ----
     w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
+    w = apply_corruption(w, corrupt)
 
     # -- agent edge: Krasnosel'skii z-update + partial participation ----
-    u = participation_mask(k_part, cfg)
+    u = live_mask_rows(participation_mask(k_part, cfg), live)
+    u, _ok = increment_guard(cfg, w, u)
     x_new, z_new = agent_edge(cfg, u, w, x, z, y, z_seen, prox_h, mesh)
 
     # -- compressed uplink: t advances by the transmitted increment ------

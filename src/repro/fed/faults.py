@@ -1,0 +1,330 @@
+"""Deterministic fault injection for the federation runtime.
+
+The broker/engine split (fed/broker.py's ROUND PROTOCOL) makes TIMING a
+recorded, replayable input to the jitted round.  This module extends the
+same contract to FAILURE: a seeded :class:`FaultPlan` decides, ahead of
+time, which agents crash, stall, drop their uplink, or corrupt their
+increment -- and a :class:`FaultRecord` captures what the broker actually
+did about it (retries, evictions, rejoins, quarantined rows), so that
+
+    ``broker.run(step, state, R, faults=plan)``  and
+    ``broker.replay(step, state, schedule, record=broker.record)``
+
+produce bitwise-identical trajectories.  Nothing in this module touches
+jax: plans and records are plain host-side data, JSON round-trippable
+(NaN corrupt values included), and cheap to query per (agent, round).
+
+Fault kinds
+-----------
+``crash``    agent is dead for rounds ``[round, until)`` (``until=None``
+             = forever): dispatched work silently disappears, so the
+             broker's gate timeout -> retry -> evict machinery engages.
+``drop``     the agent does the work but the uplink for ``round`` is
+             lost in transit on its first attempt; the broker's
+             redispatch recovers it.
+``corrupt``  the increment for ``round`` arrives multiplied by
+             ``value`` per row (NaN/Inf poison it outright, a huge
+             finite value trips the norm guard).  Applied IN-JIT by
+             ``engine.apply_corruption`` from the broker-realized row,
+             keeping numerics out of the host threads.
+``stall``    transient slowdown: ``delay`` seconds are added to the
+             worker's latency for ``round``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("crash", "drop", "corrupt", "stall")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``kind`` hitting ``agent`` at ``round``."""
+
+    kind: str
+    agent: int
+    round: int
+    until: Optional[int] = None    # crash only: first round alive again
+    value: float = float("nan")    # corrupt only: per-row multiplier
+    delay: float = 0.0             # stall only: extra latency (seconds)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} (one of {FAULT_KINDS})")
+        if self.agent < 0:
+            raise ValueError(f"agent must be >= 0, got {self.agent}")
+        if self.round < 0:
+            raise ValueError(f"round must be >= 0, got {self.round}")
+        if self.until is not None and self.until <= self.round:
+            raise ValueError(
+                f"crash until={self.until} must exceed round={self.round}")
+        if self.delay < 0:
+            raise ValueError(f"delay must be >= 0, got {self.delay}")
+
+    def to_json(self) -> dict:
+        d = {"kind": self.kind, "agent": int(self.agent),
+             "round": int(self.round)}
+        if self.until is not None:
+            d["until"] = int(self.until)
+        if self.kind == "corrupt":
+            d["value"] = float(self.value)
+        if self.kind == "stall":
+            d["delay"] = float(self.delay)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "FaultEvent":
+        return FaultEvent(kind=d["kind"], agent=int(d["agent"]),
+                          round=int(d["round"]),
+                          until=(None if d.get("until") is None
+                                 else int(d["until"])),
+                          value=float(d.get("value", float("nan"))),
+                          delay=float(d.get("delay", 0.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, deterministic set of fault events.
+
+    Like ``ArrivalSchedule`` this is an ARTIFACT: generate it once
+    (:meth:`generate`), save it next to the run, and any later process
+    can reload it and reproduce the exact same failure pattern.  The
+    queries below are what the broker consults each round.
+    """
+
+    events: Tuple[FaultEvent, ...]
+    n_agents: Optional[int] = None   # validated bound when given
+    seed: Optional[int] = None       # provenance only
+
+    def __post_init__(self):
+        evs = tuple(e if isinstance(e, FaultEvent) else FaultEvent(**e)
+                    for e in self.events)
+        object.__setattr__(self, "events", evs)
+        if self.n_agents is not None:
+            self.check_agents(int(self.n_agents))
+
+    # -- broker-facing queries ------------------------------------------
+    def check_agents(self, n_agents: int) -> None:
+        bad = [e for e in self.events if e.agent >= n_agents]
+        if bad:
+            raise ValueError(
+                f"fault plan targets agents {sorted({e.agent for e in bad})} "
+                f"but the fleet has only {n_agents} agents")
+
+    def needs_timeout(self) -> bool:
+        """True when the plan can make dispatched work vanish -- such a
+        plan needs a broker ``gate_timeout`` or the round gate would
+        block forever."""
+        return any(e.kind in ("crash", "drop") for e in self.events)
+
+    def crashed(self, agent: int, round: int) -> bool:
+        return any(e.kind == "crash" and e.agent == agent
+                   and e.round <= round
+                   and (e.until is None or round < e.until)
+                   for e in self.events)
+
+    def rejoins_at(self, round: int) -> List[int]:
+        """Agents whose crash window ends exactly at ``round``."""
+        return sorted({e.agent for e in self.events
+                       if e.kind == "crash" and e.until == round})
+
+    def dropped(self, agent: int, round: int, attempt: int) -> bool:
+        """Whether delivery ``attempt`` (0-based) of this round's uplink
+        is lost.  Each matching drop event eats one attempt, so the
+        broker's redispatch eventually gets through."""
+        n = sum(1 for e in self.events if e.kind == "drop"
+                and e.agent == agent and e.round == round)
+        return attempt < n
+
+    def corrupt_value(self, agent: int, round: int) -> Optional[float]:
+        for e in self.events:
+            if (e.kind == "corrupt" and e.agent == agent
+                    and e.round == round):
+                return float(e.value)
+        return None
+
+    def stall_delay(self, agent: int, round: int) -> float:
+        return sum(e.delay for e in self.events if e.kind == "stall"
+                   and e.agent == agent and e.round == round)
+
+    def wrap_latency(self, latency_fn: Callable[[int, int], float]
+                     ) -> Callable[[int, int], float]:
+        """Latency function with the plan's stalls folded in."""
+        def fn(agent: int, round: int) -> float:
+            return float(latency_fn(agent, round)) + self.stall_delay(
+                agent, round)
+        return fn
+
+    # -- construction / persistence -------------------------------------
+    @staticmethod
+    def generate(seed: int, n_agents: int, n_rounds: int, *,
+                 p_crash: float = 0.0, crash_length: Optional[int] = None,
+                 p_drop: float = 0.0, p_corrupt: float = 0.0,
+                 corrupt_value: float = float("nan"),
+                 p_stall: float = 0.0,
+                 stall_delay: float = 0.05) -> "FaultPlan":
+        """Draw a plan from a seeded rng -- same (seed, shape, probs)
+        always yields the same events."""
+        rng = np.random.default_rng(seed)
+        events: List[FaultEvent] = []
+        crashed_until = np.zeros(n_agents, np.int64)   # rounds < this: dead
+        for r in range(n_rounds):
+            for a in range(n_agents):
+                if r < crashed_until[a]:
+                    continue    # already down -- no new faults while dead
+                if p_crash and rng.random() < p_crash:
+                    until = (None if crash_length is None
+                             else min(r + int(crash_length), n_rounds))
+                    events.append(FaultEvent("crash", a, r, until=until))
+                    crashed_until[a] = n_rounds if until is None else until
+                    continue
+                if p_drop and rng.random() < p_drop:
+                    events.append(FaultEvent("drop", a, r))
+                if p_corrupt and rng.random() < p_corrupt:
+                    events.append(FaultEvent("corrupt", a, r,
+                                             value=corrupt_value))
+                if p_stall and rng.random() < p_stall:
+                    events.append(FaultEvent("stall", a, r,
+                                             delay=stall_delay))
+        return FaultPlan(tuple(events), n_agents=n_agents, seed=seed)
+
+    def to_json(self) -> dict:
+        return {"events": [e.to_json() for e in self.events],
+                "n_agents": self.n_agents, "seed": self.seed}
+
+    @staticmethod
+    def from_json(d: dict) -> "FaultPlan":
+        return FaultPlan(tuple(FaultEvent.from_json(e)
+                               for e in d["events"]),
+                         n_agents=d.get("n_agents"), seed=d.get("seed"))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh)   # allow_nan: corrupt values
+
+    @staticmethod
+    def load(path: str) -> "FaultPlan":
+        with open(path) as fh:
+            return FaultPlan.from_json(json.load(fh))
+
+
+@dataclasses.dataclass
+class FaultRecord:
+    """What the broker actually DID during a faulty run.
+
+    The record is the second half of the replay contract: the
+    ``ArrivalSchedule`` pins the arrival rows, the record pins the
+    per-round ``corrupt`` and ``live`` rows the jitted round consumed
+    (plus the retry/drop/error bookkeeping for inspection).  ``events``
+    is one chronological list of ``(round, agent, "evict"|"rejoin")``
+    entries so a rejoin-then-re-evict within one run stays ordered.
+    """
+
+    n_agents: int
+    events: List[Tuple[int, int, str]] = dataclasses.field(
+        default_factory=list)
+    retries: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)    # (agent, round, attempt)
+    drops: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)    # (agent, round)
+    errors: List[Tuple[int, int, str]] = dataclasses.field(
+        default_factory=list)    # (agent, round, repr(exc))
+    corrupt_rows: dict = dataclasses.field(
+        default_factory=dict)    # {round: [value] * n_agents}
+
+    # -- broker hooks ----------------------------------------------------
+    def note_eviction(self, agent: int, round: int) -> None:
+        self.events.append((int(round), int(agent), "evict"))
+
+    def note_rejoin(self, agent: int, round: int) -> None:
+        self.events.append((int(round), int(agent), "rejoin"))
+
+    def note_retry(self, agent: int, round: int, attempt: int) -> None:
+        self.retries.append((int(agent), int(round), int(attempt)))
+
+    def note_drop(self, agent: int, round: int) -> None:
+        self.drops.append((int(agent), int(round)))
+
+    def note_error(self, agent: int, round: int, err: BaseException) -> None:
+        self.errors.append((int(agent), int(round), repr(err)))
+
+    def note_corrupt_row(self, round: int, row: np.ndarray) -> None:
+        self.corrupt_rows[int(round)] = [float(v) for v in row]
+
+    # -- replay queries --------------------------------------------------
+    @property
+    def evictions(self) -> List[Tuple[int, int]]:
+        return [(a, r) for (r, a, k) in self.events if k == "evict"]
+
+    @property
+    def rejoins(self) -> List[Tuple[int, int]]:
+        return [(a, r) for (r, a, k) in self.events if k == "rejoin"]
+
+    @property
+    def has_faults(self) -> bool:
+        return bool(self.events or self.corrupt_rows)
+
+    def first_eviction_round(self) -> Optional[int]:
+        rounds = [r for (r, _a, k) in self.events if k == "evict"]
+        return min(rounds) if rounds else None
+
+    def live_row(self, round: int) -> Optional[np.ndarray]:
+        """The (N,) live row the broker passed for ``round`` -- None
+        before the first eviction (the broker passes None until then, so
+        replay must too to retrace the exact same jitted graph)."""
+        first = self.first_eviction_round()
+        if first is None or round < first:
+            return None
+        row = np.ones(self.n_agents, np.float32)
+        for (r, a, kind) in self.events:
+            if r <= round:
+                row[a] = 0.0 if kind == "evict" else 1.0
+        return row
+
+    def live_matrix(self, n_rounds: int) -> np.ndarray:
+        """(n_rounds, N) 0/1 liveness, for schedule validation."""
+        lm = np.ones((n_rounds, self.n_agents), np.float32)
+        for (r, a, kind) in self.events:
+            if r < n_rounds:
+                lm[r:, a] = 0.0 if kind == "evict" else 1.0
+        return lm
+
+    def corrupt_row(self, round: int) -> Optional[np.ndarray]:
+        row = self.corrupt_rows.get(int(round))
+        return None if row is None else np.asarray(row, np.float32)
+
+    # -- persistence -----------------------------------------------------
+    def to_json(self) -> dict:
+        return {"n_agents": int(self.n_agents),
+                "events": [list(e) for e in self.events],
+                "retries": [list(e) for e in self.retries],
+                "drops": [list(e) for e in self.drops],
+                "errors": [list(e) for e in self.errors],
+                "corrupt_rows": {str(r): row for r, row
+                                 in self.corrupt_rows.items()}}
+
+    @staticmethod
+    def from_json(d: dict) -> "FaultRecord":
+        rec = FaultRecord(n_agents=int(d["n_agents"]))
+        rec.events = [(int(r), int(a), str(k)) for r, a, k in d["events"]]
+        rec.retries = [(int(a), int(r), int(n)) for a, r, n in d["retries"]]
+        rec.drops = [(int(a), int(r)) for a, r in d["drops"]]
+        rec.errors = [(int(a), int(r), str(m)) for a, r, m in d["errors"]]
+        rec.corrupt_rows = {int(r): [float(v) for v in row]
+                            for r, row in d["corrupt_rows"].items()}
+        return rec
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh)
+
+    @staticmethod
+    def load(path: str) -> "FaultRecord":
+        with open(path) as fh:
+            return FaultRecord.from_json(json.load(fh))

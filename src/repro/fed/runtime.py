@@ -93,6 +93,8 @@ class FedConfig:
     damping: float = 1.0             # Krasnosel'skii relaxation
     async_mode: str = "off"          # "off" | "stale" bounded staleness
     max_staleness: int = 0           # K: forced arrival bound
+    guard_increments: bool = False   # in-jit finite/norm screen on uplinks
+    guard_norm_bound: float = float("inf")  # inf = finiteness-only screen
 
     def to_spec(self) -> FedSpec:
         from repro.fed.api import CompressionSpec, PrivacySpec
@@ -112,7 +114,9 @@ class FedConfig:
             state_layout=self.state_layout,
             use_pallas=self.use_pallas_update,
             async_mode=self.async_mode,
-            max_staleness=self.max_staleness)
+            max_staleness=self.max_staleness,
+            guard_increments=self.guard_increments,
+            guard_norm_bound=self.guard_norm_bound)
 
 
 def packed_layout(model: Model, fcfg):
@@ -202,7 +206,8 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
 
     grad_fn = jax.value_and_grad(per_agent_loss)
 
-    def train_step(state: FedState, batch, key: jax.Array, arrival=None):
+    def train_step(state: FedState, batch, key: jax.Array, arrival=None,
+                   corrupt=None, live=None):
         rkey = jax.random.fold_in(key, state.step)
 
         def fgrad_for(batch_slice):
@@ -238,12 +243,14 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
                 res = async_engine.packed_async_round_step(
                     ecfg, meta, state.x, state.z, t, state.y_tag,
                     state.staleness, rkey, local_solver, prox_h=prox_h,
-                    arrival=arrival, mesh=mesh)
+                    arrival=arrival, mesh=mesh, corrupt=corrupt,
+                    live=live)
             else:
                 res = async_engine.async_round_step(
                     ecfg, state.x, state.z, t, state.y_tag,
                     state.staleness, rkey, local_solver, prox_h=prox_h,
-                    arrival=arrival, mesh=mesh)
+                    arrival=arrival, mesh=mesh, corrupt=corrupt,
+                    live=live)
         elif arrival is not None:
             raise ValueError("arrival schedules require async_mode="
                              "'stale' (synchronous rounds draw "
@@ -251,11 +258,13 @@ def make_train_step(model: Model, fcfg, use_remat: bool = True):
         elif meta is not None:
             res = engine.packed_round_step(ecfg, meta, state.x, state.z,
                                            t, rkey, local_solver,
-                                           prox_h=prox_h, mesh=mesh)
+                                           prox_h=prox_h, mesh=mesh,
+                                           corrupt=corrupt, live=live)
         else:
             res = engine.round_step(ecfg, state.x, state.z, t, rkey,
                                     local_solver, prox_h=prox_h,
-                                    mesh=mesh)
+                                    mesh=mesh, corrupt=corrupt,
+                                    live=live)
 
         # aux is the (N_e, A) per-epoch loss stack when homogeneous, a
         # tuple of per-group (N_e_g, size_g) stacks when grouped (epoch

@@ -140,6 +140,15 @@ def fed_axes(axis_sizes) -> tuple[Optional[str], Optional[str]]:
     return None, None
 
 
+def fed_row_spec(agent_axis: Optional[str]) -> P:
+    """Spec for a per-agent ``(N,)`` round row -- arrival masks,
+    staleness counters, the broker's corrupt / live fault rows: one
+    scalar per agent, sharded on the agent axis alone.  The one spec
+    every (N,) round input shares, so fault overrides placed by callers
+    agree with the engine's shard_map edges."""
+    return P(agent_axis)
+
+
 def fed_batch_specs(batch, agent_axis: Optional[str],
                     inner_axis: Optional[str] = None):
     """Specs for an agent-stacked batch ``(A, per_agent_batch, ...)``:
@@ -198,7 +207,7 @@ def fed_state_specs(stacked_params, *, fsdp_axis: Optional[str] = "data",
     return FedState(x=pspec, z=pspec, step=P(),
                     t=pspec if compressed else None,
                     y_tag=pspec if stale else None,
-                    staleness=P(agent_axis) if stale else None)
+                    staleness=fed_row_spec(agent_axis) if stale else None)
 
 
 def shardings(mesh: Mesh, spec_tree):

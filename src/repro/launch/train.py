@@ -14,12 +14,14 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import (checkpoint_extra, find_latest_checkpoint,
+                              save_checkpoint, restore_checkpoint)
 from repro.configs import get_config
 from repro.configs.base import InputShape
 from repro.data.synthetic import make_batch_for
@@ -44,6 +46,16 @@ def main():
                     choices=["sgd", "momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="fed mode: save the round state to "
+                         "<checkpoint>/rounds/step-NNNNNN every N rounds "
+                         "(atomic tmp-then-rename saves; 0 = off)")
+    ap.add_argument("--resume", action="store_true",
+                    help="fed mode: resume from the latest committed "
+                         "round checkpoint under <checkpoint>/rounds "
+                         "(bit-for-bit: per-round keys are derived by "
+                         "fold_in, so the continued run matches an "
+                         "uninterrupted one)")
     # every fed knob is generated from the FedSpec fields -- new spec
     # fields / registered compressors become flags without edits here
     api.add_spec_args(ap)
@@ -52,6 +64,10 @@ def main():
     spec = api.spec_from_args(args)
     if args.mode == "fed":
         spec.validate()      # fail fast, before building the model
+    if (args.checkpoint_every or args.resume) and not args.checkpoint:
+        ap.error("--checkpoint-every/--resume require --checkpoint")
+    if (args.checkpoint_every or args.resume) and args.mode != "fed":
+        ap.error("--checkpoint-every/--resume are fed-mode only")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -93,7 +109,24 @@ def main():
         state = trainer.init(key)
         stale = spec.async_mode != "off"
         arrival_rows = []   # realized (N,) rows -> the run's schedule
-        for i in range(args.steps):
+        start_round = 0
+        rounds_dir = (os.path.join(args.checkpoint, "rounds")
+                      if args.checkpoint else None)
+        if args.resume:
+            latest = find_latest_checkpoint(rounds_dir)
+            if latest is None:
+                print(f"resume: no committed checkpoint under "
+                      f"{rounds_dir} -- starting from round 0")
+            else:
+                shards = (trainer._state_shardings()
+                          if mesh is not None else None)
+                state = restore_checkpoint(latest, state, shards)
+                meta_extra = checkpoint_extra(latest) or {}
+                start_round = int(meta_extra.get("round", 0))
+                arrival_rows = [np.asarray(r, np.float32)
+                                for r in meta_extra.get("arrivals", [])]
+                print(f"resumed from {latest} at round {start_round}")
+        for i in range(start_round, args.steps):
             batch = make_batch_for(cfg, shape, jax.random.fold_in(key, i),
                                    n_agents=spec.n_agents)
             t0 = time.time()
@@ -106,6 +139,15 @@ def main():
             print(f"round {i:4d} loss={float(metrics['loss']):.4f} "
                   f"part={float(metrics['participation']):.2f}{extra} "
                   f"dt={time.time() - t0:.2f}s")
+            if (args.checkpoint_every
+                    and (i + 1) % args.checkpoint_every == 0):
+                ck = os.path.join(rounds_dir, f"step-{i + 1:06d}")
+                save_checkpoint(
+                    ck, state, step=i + 1,
+                    extra={"round": i + 1,
+                           "arrivals": [np.asarray(r).tolist()
+                                        for r in arrival_rows]})
+                print(f"  checkpointed round {i + 1} -> {ck}")
         if stale and spec.privacy.tau > 0 and arrival_rows:
             # the nominal table above charged every agent the full K
             # rounds; recompose over the REALIZED arrival schedule --
@@ -145,8 +187,15 @@ def main():
         final = params
 
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, final, step=args.steps)
-        print(f"saved checkpoint to {args.checkpoint}")
+        target = args.checkpoint
+        if args.mode == "fed" and (args.checkpoint_every or args.resume):
+            # rolling round checkpoints live under <checkpoint>/rounds;
+            # save_checkpoint atomically REPLACES its target directory,
+            # so the consensus save gets a sibling entry instead of
+            # clobbering the whole tree
+            target = os.path.join(args.checkpoint, "consensus")
+        save_checkpoint(target, final, step=args.steps)
+        print(f"saved checkpoint to {target}")
     n = sum(x.size for x in jax.tree_util.tree_leaves(final))
     print(f"done: {args.arch} ({n/1e6:.2f}M params)")
 
