@@ -385,6 +385,58 @@ def _sharded(quick):
     return rows, payload
 
 
+def _robust_agg(quick):
+    """Robust-aggregation uplink statistics (byzantine-robust PR).
+
+    One jitted aggregate over an (N, width) z stack per (stat, backend,
+    N) point: the plain survivor mean (the historical reduce, the
+    baseline row), trimmed_mean(f=2) and coord_median through the XLA
+    registry path and through the robust_agg sort kernel (interpret
+    mode on this CPU container -- a correctness path, not TPU
+    performance, like every other interpret-mode row here).  The
+    quantity bought is the robustness statistic itself; the cost is the
+    per-column sort replacing the single row reduce, so the ratio
+    column reports each stat against the mean at the same N."""
+    from repro.fed import robust
+    from repro.kernels.robust_agg import ops as robust_ops
+
+    iters = 2 if quick else 8
+    width = 2048 if quick else 8192
+    rows, payload = [], []
+    key = jax.random.PRNGKey(0)
+
+    def registry(name, param):
+        return jax.jit(lambda v: robust.aggregate_rows(
+            v, None, name=name, param=param, backend="xla"))
+
+    for n in (64, 256, 1024):
+        x = jax.random.normal(jax.random.fold_in(key, n), (n, width))
+        cases = [
+            ("mean", "xla", registry("mean", 0.0)),
+            ("trimmed_mean_f2", "xla", registry("trimmed_mean", 2.0)),
+            ("trimmed_mean_f2", "pallas",
+             jax.jit(lambda v: robust_ops.robust_aggregate(
+                 v, stat="trimmed_mean", trim=2))),
+            ("coord_median", "xla", registry("coord_median", 0.0)),
+            ("coord_median", "pallas",
+             jax.jit(lambda v: robust_ops.robust_aggregate(
+                 v, stat="coord_median"))),
+        ]
+        ms_mean = None
+        for stat, backend, f in cases:
+            ms = _best_ms(f, (x,), iters, reps=2)
+            if ms_mean is None:
+                ms_mean = ms
+            name = f"{stat}_{backend}_n{n}"
+            rows.append(f"engine,robust_agg:{name},{ms:.3f},"
+                        f"{ms / ms_mean:.2f}x,N={n};m={width}")
+            payload.append(dict(kind="robust_agg", case=name, stat=stat,
+                                backend=backend, n_agents=n,
+                                width=width, ms_per_agg=ms,
+                                rel_to_mean=ms / ms_mean))
+    return rows, payload
+
+
 def _edge_trees():
     key = jax.random.PRNGKey(0)
     tree = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i),
@@ -545,12 +597,14 @@ def run(quick=True):
     struct_rows, struct_payload = _round_structure()
     async_rows, async_payload = _async_rounds(quick)
     sharded_rows, sharded_payload = _sharded(quick)
+    robust_rows, robust_payload = _robust_agg(quick)
     edge_rows, edge_payload = _round_edge(quick)
     payload = {"cases": (round_payload + struct_payload + async_payload
-                         + sharded_payload + edge_payload),
+                         + sharded_payload + robust_payload
+                         + edge_payload),
                "quick": bool(quick)}
     return (round_rows + struct_rows + async_rows + sharded_rows
-            + edge_rows, payload)
+            + robust_rows + edge_rows, payload)
 
 
 if __name__ == "__main__":

@@ -82,6 +82,12 @@ class FedPLTConfig:
     # become non-arrivals instead of poisoning the consensus mean
     guard_increments: bool = False
     guard_norm_bound: float = float("inf")
+    # coordinator aggregation (repro.fed.robust registry): "mean" keeps
+    # the historical uplink bitwise; robust statistics bound what
+    # finite byzantine increments can do (param: trimmed_mean's trim
+    # count f, norm_clip_mean's clip radius)
+    aggregator: str = "mean"
+    aggregator_param: float = 0.0
 
     def to_spec(self, n_agents: Optional[int] = None):
         """The equivalent :class:`repro.fed.api.FedSpec` (the front-door
@@ -111,7 +117,9 @@ class FedPLTConfig:
             async_mode=self.async_mode,
             max_staleness=self.max_staleness,
             guard_increments=self.guard_increments,
-            guard_norm_bound=self.guard_norm_bound)
+            guard_norm_bound=self.guard_norm_bound,
+            aggregator=self.aggregator,
+            aggregator_param=self.aggregator_param)
 
 
 class FedPLT:
@@ -171,7 +179,9 @@ class FedPLT:
                 max_staleness=config.max_staleness),
             agent_shards=engine.mesh_agent_shards(mesh),
             guard_increments=config.guard_increments,
-            guard_norm_bound=config.guard_norm_bound)
+            guard_norm_bound=config.guard_norm_bound,
+            aggregator=config.aggregator,
+            aggregator_param=config.aggregator_param)
         # packed layout: the dense state is single-leaf, so its resident
         # (N, n) buffer IS the stacked array (pack_leaves fast path, no
         # lane padding) -- the meta is pure shape arithmetic and the

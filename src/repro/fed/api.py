@@ -43,6 +43,7 @@ from repro.core.solvers import SolverConfig
 from repro.fed import engine
 from repro.fed.compress import (COMPRESS_BACKENDS, available_compressors,
                                 get_compressor)
+from repro.fed.robust import available_aggregators, validate_aggregator
 from repro.fed.solvers import get_solver
 
 
@@ -285,6 +286,20 @@ class FedSpec:
             flag="--guard-norm-bound", arg_type=float,
             help="l2 norm bound for --guard-increments (inf = "
                  "finiteness-only screen)"))
+    # coordinator aggregation (repro.fed.robust registry): "mean" keeps
+    # the historical uplink bitwise; trimmed_mean / coord_median /
+    # norm_clip_mean replace it with a robust statistic of the live
+    # rows, bounding what finite guard-evading byzantine increments
+    # can do to the consensus
+    aggregator: str = dataclasses.field(default="mean", metadata=_cli(
+        flag="--aggregator",
+        help="coordinator aggregator (repro.fed.robust registry name; "
+             "mean = the historical uplink)"))
+    aggregator_param: float = dataclasses.field(
+        default=0.0, metadata=_cli(
+            flag="--aggregator-param", arg_type=float,
+            help="aggregator parameter: trim count f for trimmed_mean, "
+                 "clip radius for norm_clip_mean"))
     # sharded rounds (engine mesh contract): shard the agent axis of
     # every per-agent carrier across this many devices.  1 = unsharded;
     # a 1-device mesh reproduces the unsharded trajectory bitwise.
@@ -376,7 +391,9 @@ class FedSpec:
             staleness=self.staleness_config(),
             agent_shards=self.resolved_agent_shards(),
             guard_increments=self.guard_increments,
-            guard_norm_bound=self.guard_norm_bound)
+            guard_norm_bound=self.guard_norm_bound,
+            aggregator=self.aggregator,
+            aggregator_param=self.aggregator_param)
 
     def staleness_config(self) -> engine.StalenessConfig:
         """The engine :class:`repro.fed.engine.StalenessConfig` this
@@ -519,6 +536,8 @@ class FedSpec:
         if not self.guard_norm_bound > 0.0:   # also rejects NaN
             raise ValueError("guard_norm_bound must be positive (use "
                              "inf for a finiteness-only screen)")
+        validate_aggregator(self.aggregator, self.aggregator_param,
+                            self.n_agents)
         if self.weight_decay < 0.0:
             raise ValueError("weight_decay must be >= 0")
         if self.weight_decay != 0.0 and self.prox_h not in (
@@ -631,7 +650,9 @@ class FedSpec:
             async_mode=self.async_mode,
             max_staleness=self.max_staleness,
             guard_increments=self.guard_increments,
-            guard_norm_bound=self.guard_norm_bound)
+            guard_norm_bound=self.guard_norm_bound,
+            aggregator=self.aggregator,
+            aggregator_param=self.aggregator_param)
 
 
 def as_spec(cfg: Any) -> FedSpec:
@@ -1086,6 +1107,8 @@ def _cli_entries():
                     kwargs["choices"] = meta["choices"]
             if f.name == "name" and owner == "compression":
                 kwargs["choices"] = available_compressors()
+            if f.name == "aggregator" and owner == "spec":
+                kwargs["choices"] = available_aggregators()
             out.append((owner, f.name, flag, dest, kwargs))
     return out
 

@@ -207,9 +207,10 @@ def async_round_step(cfg: RoundConfig, x: Any, z: Any, t: Any,
     key, k_part, k_solve = jax.random.split(key, 3)
 
     # -- coordinator edge: identical to the synchronous round (with the
-    # survivor rescale when agents were evicted) ------------------------
+    # survivor rescale when agents were evicted, and the robust
+    # aggregate when one is configured) ---------------------------------
     z_seen = t if cfg.compressed else z
-    z_seen = engine.survivor_mean_input(cfg, z_seen, live)
+    z_seen = engine.robust_seen(cfg, z_seen, live, mesh=mesh)
     y, v_fresh = engine.coordinator_edge(cfg, z, z_seen, prox_h, mesh)
 
     # -- training targets: fresh agents pull this round's reflection,
@@ -298,7 +299,7 @@ def packed_async_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     key, k_part, k_solve = jax.random.split(key, 3)
 
     z_seen = t if cfg.compressed else z
-    z_seen = engine.survivor_mean_input(cfg, z_seen, live)
+    z_seen = engine.robust_seen(cfg, z_seen, live, meta, mesh)
     y, v_fresh = engine.coordinator_edge_packed(cfg, z, z_seen, meta,
                                                 prox_h, mesh)
 

@@ -444,14 +444,25 @@ class IncrementBroker:
                 u = (ready & live).astype(np.float32)
                 corrupt = None
                 if plan is not None:
-                    crow = np.zeros(N, np.float32)
+                    # plans with byzantine events realize (N, 2)
+                    # [mult, add] pairs; legacy plans keep the (N,)
+                    # multiplicative rows so their recordings replay on
+                    # the exact historical jitted graph
+                    byz = plan.has_byzantine
+                    crow = (np.zeros((N, 2), np.float32) if byz
+                            else np.zeros(N, np.float32))
                     hit = False
                     for a in np.nonzero(ready & live)[0]:
-                        val = plan.corrupt_value(
-                            int(a), int(dispatch_round[a]))
+                        rnd = int(dispatch_round[a])
+                        val = plan.corrupt_value(int(a), rnd)
                         if val is not None:
-                            crow[a] = val
+                            crow[a] = (val, 0.0) if byz else val
                             hit = True
+                        if byz:
+                            pair = plan.byzantine_at(int(a), rnd)
+                            if pair is not None:
+                                crow[a] = pair
+                                hit = True
                     if hit:
                         corrupt = crow
                         record.note_corrupt_row(r, crow)

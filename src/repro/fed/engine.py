@@ -117,6 +117,17 @@ Solver groups must land shard-aligned (group boundaries at multiples
 of the shard row block) or the round step raises before tracing;
 a non-elementwise custom prox falls back to the unsharded edge formula
 (GSPMD still shards the arithmetic, there is just no per-shard kernel).
+MESH CONTRACT extension (robust aggregation): an order-statistic
+aggregator (``RoundConfig.aggregator`` != "mean") needs the FULL agent
+column, so the packed sharded uplink is preceded by an all-gather of
+the per-shard row blocks on the agent axis
+(:func:`repro.fed.robust.robust_seen_packed`) -- ``(N/shards, width)``
+rows move per device per round, the documented price of a nonzero
+breakdown point.  ``mean`` keeps the single-psum uplink untouched, and
+a 1-device mesh remains bitwise identical to the unsharded engine
+(the gather of one shard is the identity).  Tree-layout robust rounds
+under a mesh compute the aggregate globally (GSPMD inserts the
+collectives) before the sharded edges run.
 """
 
 from __future__ import annotations
@@ -310,9 +321,22 @@ class RoundConfig:
     # an all-ones mask: trajectories are bitwise unchanged
     guard_increments: bool = False
     guard_norm_bound: float = float("inf")   # inf = finiteness-only screen
+    # coordinator aggregator (repro.fed.robust registry): "mean" keeps
+    # the historical uplink bitwise; "trimmed_mean" (param = trim count
+    # f), "coord_median", and "norm_clip_mean" (param = clip radius)
+    # replace the agent mean with a robust statistic of the live rows
+    # -- finite, guard-evading byzantine increments bounded by the
+    # aggregator's breakdown point instead of steering the consensus
+    aggregator: str = "mean"
+    aggregator_param: float = 0.0
 
     def __post_init__(self):
         get_compressor(self.compression)  # fail fast on unknown names
+        from repro.fed import robust as robust_lib
+        object.__setattr__(
+            self, "aggregator_param",
+            robust_lib.validate_aggregator(
+                self.aggregator, self.aggregator_param, self.n_agents))
         if self.compress_backend not in compress_lib.COMPRESS_BACKENDS:
             raise ValueError(
                 f"unknown compress backend {self.compress_backend!r}; "
@@ -387,6 +411,20 @@ class RoundConfig:
     def compressed(self) -> bool:
         return self.compression != "none"
 
+    @property
+    def robust_aggregator(self) -> Optional[str]:
+        """The aggregator name when the uplink is actually robust, else
+        None: ``"mean"`` -- and ``"trimmed_mean"`` at ``f = 0``, which
+        IS the mean -- resolve to the historical
+        :func:`survivor_mean_input` path, keeping clean configurations
+        bitwise identical to the pre-robustness engine."""
+        if self.aggregator == "mean":
+            return None
+        if (self.aggregator == "trimmed_mean"
+                and int(self.aggregator_param) == 0):
+            return None
+        return self.aggregator
+
 
 class RoundResult(NamedTuple):
     x: Any               # pytree, leaves (N, ...)
@@ -459,17 +497,43 @@ def masked_mix(u: jnp.ndarray, new: Any, old: Any) -> Any:
 def apply_corruption(w: Any, corrupt) -> Any:
     """Inject a recorded corruption row into the solver output.
 
-    ``corrupt`` is the broker-realized ``(N,)`` row: agent ``i``'s row
-    of every leaf is multiplied by ``corrupt[i]`` wherever the entry is
-    non-zero-or-NaN (NaN multipliers poison the row to NaN, Inf to Inf,
-    a huge finite value trips the norm guard); zero entries leave the
-    row untouched.  ``None`` returns ``w`` unchanged.  This is the
-    numerics half of a ``FaultPlan`` ``corrupt`` event: the broker only
-    RECORDS the row (timing side), the jitted round applies it here, so
-    replaying the row reproduces the corruption bit-for-bit."""
+    ``corrupt`` is the broker-realized corruption, in one of two forms:
+
+    * an ``(N,)`` row (the historical encoding): agent ``i``'s row of
+      every leaf is multiplied by ``corrupt[i]`` wherever the entry is
+      non-zero-or-NaN (NaN multipliers poison the row to NaN, Inf to
+      Inf, a huge finite value trips the norm guard); zero entries
+      leave the row untouched.
+    * an ``(N, 2)`` ``[mult, add]`` pair per agent (the byzantine
+      encoding): flagged rows -- any row whose pair is not ``(0, 0)``
+      -- become ``w * mult + add``, which expresses the guard-evading
+      attacks (``sign_flip`` = ``(-1, 0)``, ``scale(v)`` = ``(v, 0)``,
+      ``drift(v)`` = ``(1, v)``) as well as every legacy multiplicative
+      corruption (``(v, 0)``).
+
+    ``None`` returns ``w`` unchanged.  This is the numerics half of a
+    ``FaultPlan`` corruption event: the broker only RECORDS the rows
+    (timing side), the jitted round applies them here, so replaying the
+    rows reproduces the corruption bit-for-bit.  Plans without
+    byzantine events keep realizing the ``(N,)`` form, so their
+    recordings replay on the exact historical graph."""
     if corrupt is None:
         return w
-    c = jnp.asarray(corrupt, jnp.float32).reshape(-1)
+    c = jnp.asarray(corrupt, jnp.float32)
+    if c.ndim == 2:
+        mult, add = c[:, 0], c[:, 1]
+        # NaN != 0 is True: NaN entries flag the row (poison semantics)
+        flagged = (mult != 0.0) | (add != 0.0)
+
+        def poison(l):
+            shape = (-1,) + (1,) * (l.ndim - 1)
+            return jnp.where(
+                flagged.reshape(shape),
+                l * mult.astype(l.dtype).reshape(shape)
+                + add.astype(l.dtype).reshape(shape), l)
+
+        return tree_map(poison, w)
+    c = c.reshape(-1)
     flagged = c != 0.0        # NaN != 0 is True: NaN rows are flagged
 
     def poison(l):
@@ -541,6 +605,38 @@ def survivor_mean_input(cfg: RoundConfig, z_seen: Any, live) -> Any:
         lambda l: l * scale.astype(l.dtype).reshape(
             (-1,) + (1,) * (l.ndim - 1)),
         z_seen)
+
+
+def robust_seen(cfg: RoundConfig, z_seen: Any, live, meta=None,
+                mesh=None) -> Any:
+    """The uplink's aggregation input transform -- THE one place the
+    coordinator's reduction is shaped.  ``aggregator="mean"`` (and
+    ``trimmed_mean`` at ``f = 0``) calls :func:`survivor_mean_input`
+    exactly: clean configurations keep the historical graph bitwise
+    (including the ``z_seen is z`` object-identity the lagged-path
+    dispatch keys on).  A robust aggregator computes its ``(1, M)``
+    statistic over the LIVE rows and broadcasts it back across the
+    agent axis, so the unchanged edges' fixed mean-over-N reproduces
+    the robust ``y`` -- one transform, every layout x backend x
+    compressor x mesh combo (rationale in :mod:`repro.fed.robust`).
+
+    ``meta`` marks the packed form (``z_seen`` a resident ``(N, width)``
+    buffer); without it ``z_seen`` is an agent-stacked pytree."""
+    name = cfg.robust_aggregator
+    if name is None:
+        return survivor_mean_input(cfg, z_seen, live)
+    from repro.fed import robust as robust_lib
+
+    if meta is not None:
+        col = None if mesh is None else _mesh_col_axis(
+            mesh, z_seen.shape[1])
+        return robust_lib.robust_seen_packed(
+            z_seen, live, name=name, param=cfg.aggregator_param,
+            meta=meta, backend=cfg.engine_backend, mesh=mesh,
+            col_axis=col)
+    return robust_lib.robust_seen_tree(
+        z_seen, live, name=name, param=cfg.aggregator_param,
+        backend=cfg.engine_backend)
 
 
 def live_mask_rows(u: jnp.ndarray, live) -> jnp.ndarray:
@@ -951,7 +1047,7 @@ def packed_round_step(cfg: RoundConfig, meta, x: jnp.ndarray,
     key, k_part, k_solve = jax.random.split(key, 3)
 
     z_seen = t if cfg.compressed else z
-    z_seen = survivor_mean_input(cfg, z_seen, live)
+    z_seen = robust_seen(cfg, z_seen, live, meta, mesh)
     y, v = coordinator_edge_packed(cfg, z, z_seen, meta, prox_h, mesh)
 
     w, aux = run_solvers(local_solver, x, v, k_solve, cfg.n_agents)
@@ -1079,9 +1175,10 @@ def round_step(cfg: RoundConfig, x: Any, z: Any, t: Any, key: jax.Array,
     # -- coordinator edge: prox of the mean of the *transmitted* copies
     # when the exchange is compressed (t_i), else the exact z_i (Lemma
     # 6), fused with the reflection; evictions rescale the input so the
-    # mean runs over survivors only ------------------------------------
+    # mean runs over survivors only, and a robust aggregator replaces
+    # the mean with its statistic of the live rows --------------------
     z_seen = t if cfg.compressed else z
-    z_seen = survivor_mean_input(cfg, z_seen, live)
+    z_seen = robust_seen(cfg, z_seen, live, mesh=mesh)
     y, v = coordinator_edge(cfg, z, z_seen, prox_h, mesh)
 
     # -- agents: warm-started local training on the reflected states ----

@@ -29,17 +29,46 @@ Fault kinds
              keeping numerics out of the host threads.
 ``stall``    transient slowdown: ``delay`` seconds are added to the
              worker's latency for ``round``.
+
+Byzantine kinds (adversarial, guard-evading -- the increments stay
+finite and in-norm, so only a robust aggregator stops them; see
+:mod:`repro.fed.robust`).  All three are WINDOWED like ``crash``:
+active for rounds ``[round, until)``, ``until=None`` = forever.
+
+``sign_flip``  the agent submits ``-w`` -- the classic consensus
+               -steering attack (no ``value``).
+``scale``      the agent submits ``value * w`` (``value`` finite and
+               nonzero; huge values belong to ``corrupt`` + the norm
+               guard, this kind models in-bound distortion).
+``drift``      the agent submits ``w + value`` (``value`` finite): a
+               constant pull toward an attacker-chosen direction.
+
+Byzantine corruptions are realized by the broker as ``(N, 2)``
+``[mult, add]`` rows consumed by ``engine.apply_corruption`` and
+recorded in the :class:`FaultRecord` -- replay is bit-for-bit, same as
+the multiplicative ``corrupt`` kind.  Plans WITHOUT byzantine events
+keep realizing the historical ``(N,)`` rows, so old recordings replay
+on the exact same jitted graph.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import json
-from typing import Callable, List, Optional, Tuple
+import math
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("crash", "drop", "corrupt", "stall")
+BYZANTINE_KINDS = ("sign_flip", "scale", "drift")
+
+FAULT_KINDS = ("crash", "drop", "corrupt", "stall") + BYZANTINE_KINDS
+
+# THE no-value sentinel: every valueless event must carry this exact
+# object so dataclass equality (which can only see NaN == NaN through
+# the identity shortcut) treats regenerated / reloaded plans as equal
+_NAN = float("nan")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +78,8 @@ class FaultEvent:
     kind: str
     agent: int
     round: int
-    until: Optional[int] = None    # crash only: first round alive again
-    value: float = float("nan")    # corrupt only: per-row multiplier
+    until: Optional[int] = None    # crash/byzantine: first round clear
+    value: float = _NAN            # corrupt/scale/drift parameter
     delay: float = 0.0             # stall only: extra latency (seconds)
 
     def __post_init__(self):
@@ -66,13 +95,52 @@ class FaultEvent:
                 f"crash until={self.until} must exceed round={self.round}")
         if self.delay < 0:
             raise ValueError(f"delay must be >= 0, got {self.delay}")
+        if self.kind in BYZANTINE_KINDS:
+            if self.delay:
+                raise ValueError(
+                    f"{self.kind} events carry no delay (that is what "
+                    f"'stall' models), got delay={self.delay}")
+            if self.kind == "sign_flip":
+                if not math.isnan(self.value):
+                    raise ValueError(
+                        f"sign_flip takes no value (the multiplier IS "
+                        f"-1), got value={self.value}")
+            elif self.kind == "scale":
+                if not (math.isfinite(self.value) and self.value != 0.0):
+                    raise ValueError(
+                        f"scale needs a finite nonzero value (non-finite "
+                        f"poison is the 'corrupt' kind), got "
+                        f"value={self.value}")
+            elif not math.isfinite(self.value):    # drift
+                raise ValueError(
+                    f"drift needs a finite value, got value={self.value}")
+
+    @property
+    def byzantine(self) -> bool:
+        return self.kind in BYZANTINE_KINDS
+
+    def byzantine_pair(self) -> Tuple[float, float]:
+        """The ``(mult, add)`` row this event realizes
+        (:func:`repro.fed.engine.apply_corruption` semantics)."""
+        if self.kind == "sign_flip":
+            return (-1.0, 0.0)
+        if self.kind == "scale":
+            return (float(self.value), 0.0)
+        if self.kind == "drift":
+            return (1.0, float(self.value))
+        raise ValueError(f"{self.kind!r} is not a byzantine kind")
+
+    def active_at(self, round: int) -> bool:
+        """Whether this (windowed) event is live at ``round``."""
+        return (self.round <= round
+                and (self.until is None or round < self.until))
 
     def to_json(self) -> dict:
         d = {"kind": self.kind, "agent": int(self.agent),
              "round": int(self.round)}
         if self.until is not None:
             d["until"] = int(self.until)
-        if self.kind == "corrupt":
+        if self.kind in ("corrupt", "scale", "drift"):
             d["value"] = float(self.value)
         if self.kind == "stall":
             d["delay"] = float(self.delay)
@@ -80,11 +148,14 @@ class FaultEvent:
 
     @staticmethod
     def from_json(d: dict) -> "FaultEvent":
+        v = d.get("value")
         return FaultEvent(kind=d["kind"], agent=int(d["agent"]),
                           round=int(d["round"]),
                           until=(None if d.get("until") is None
                                  else int(d["until"])),
-                          value=float(d.get("value", float("nan"))),
+                          value=(_NAN if v is None or (
+                              isinstance(v, float) and math.isnan(v))
+                              else float(v)),
                           delay=float(d.get("delay", 0.0)))
 
 
@@ -108,6 +179,21 @@ class FaultPlan:
         object.__setattr__(self, "events", evs)
         if self.n_agents is not None:
             self.check_agents(int(self.n_agents))
+        # (agent, round) indexes, built once: the broker queries per
+        # agent per round per attempt from its hot loop, and a linear
+        # scan over a many-round generated plan is O(events) per query.
+        # First matching event wins, exactly like the scans these
+        # replace (regression-tested against them in tests).
+        corrupt_index: Dict[Tuple[int, int], float] = {}
+        byz_index: Dict[int, List[FaultEvent]] = {}
+        for e in evs:
+            if e.kind == "corrupt":
+                corrupt_index.setdefault((e.agent, e.round),
+                                         float(e.value))
+            elif e.kind in BYZANTINE_KINDS:
+                byz_index.setdefault(e.agent, []).append(e)
+        object.__setattr__(self, "_corrupt_index", corrupt_index)
+        object.__setattr__(self, "_byz_index", byz_index)
 
     # -- broker-facing queries ------------------------------------------
     def check_agents(self, n_agents: int) -> None:
@@ -143,11 +229,43 @@ class FaultPlan:
         return attempt < n
 
     def corrupt_value(self, agent: int, round: int) -> Optional[float]:
+        return self._corrupt_index.get((agent, round))
+
+    def _corrupt_value_scan(self, agent: int, round: int
+                            ) -> Optional[float]:
+        """The pre-index linear scan, kept as the regression oracle for
+        :meth:`corrupt_value` (asserted equal in tests)."""
         for e in self.events:
             if (e.kind == "corrupt" and e.agent == agent
                     and e.round == round):
                 return float(e.value)
         return None
+
+    def byzantine_at(self, agent: int, round: int
+                     ) -> Optional[Tuple[float, float]]:
+        """The ``(mult, add)`` pair of the first byzantine event whose
+        window covers ``(agent, round)``, or None -- the broker realizes
+        this into the ``(N, 2)`` corruption row."""
+        for e in self._byz_index.get(agent, ()):
+            if e.active_at(round):
+                return e.byzantine_pair()
+        return None
+
+    def _byzantine_at_scan(self, agent: int, round: int
+                           ) -> Optional[Tuple[float, float]]:
+        """Linear-scan regression oracle for :meth:`byzantine_at`."""
+        for e in self.events:
+            if (e.kind in BYZANTINE_KINDS and e.agent == agent
+                    and e.active_at(round)):
+                return e.byzantine_pair()
+        return None
+
+    @property
+    def has_byzantine(self) -> bool:
+        """Whether any byzantine event is scheduled: gates the broker's
+        corruption-row encoding -- plans without byzantine events keep
+        the historical ``(N,)`` rows so old recordings replay bitwise."""
+        return bool(self._byz_index)
 
     def stall_delay(self, agent: int, round: int) -> float:
         return sum(e.delay for e in self.events if e.kind == "stall"
@@ -166,13 +284,43 @@ class FaultPlan:
     def generate(seed: int, n_agents: int, n_rounds: int, *,
                  p_crash: float = 0.0, crash_length: Optional[int] = None,
                  p_drop: float = 0.0, p_corrupt: float = 0.0,
-                 corrupt_value: float = float("nan"),
+                 corrupt_value: float = _NAN,
                  p_stall: float = 0.0,
-                 stall_delay: float = 0.05) -> "FaultPlan":
+                 stall_delay: float = 0.05,
+                 n_byzantine: int = 0,
+                 byzantine_kind: str = "sign_flip",
+                 byzantine_value: Optional[float] = None,
+                 byzantine_start: int = 0) -> "FaultPlan":
         """Draw a plan from a seeded rng -- same (seed, shape, probs)
-        always yields the same events."""
+        always yields the same events.
+
+        ``n_byzantine`` picks that many distinct agents (from the same
+        rng, so the pick is seeded too) and schedules one PERSISTENT
+        ``byzantine_kind`` event per agent starting at
+        ``byzantine_start``; ``byzantine_value`` is required for
+        ``scale``/``drift``.  ``n_byzantine=0`` (the default) draws
+        nothing extra, keeping legacy plans bit-identical."""
         rng = np.random.default_rng(seed)
         events: List[FaultEvent] = []
+        if n_byzantine:
+            if byzantine_kind not in BYZANTINE_KINDS:
+                raise ValueError(
+                    f"unknown byzantine kind {byzantine_kind!r} "
+                    f"(one of {BYZANTINE_KINDS})")
+            if byzantine_kind != "sign_flip" and byzantine_value is None:
+                raise ValueError(
+                    f"{byzantine_kind} needs a byzantine_value")
+            if int(n_byzantine) > n_agents:
+                raise ValueError(
+                    f"n_byzantine={n_byzantine} exceeds "
+                    f"n_agents={n_agents}")
+            picked = rng.choice(n_agents, size=int(n_byzantine),
+                                replace=False)
+            for a in sorted(int(a) for a in picked):
+                events.append(FaultEvent(
+                    byzantine_kind, a, int(byzantine_start),
+                    value=(_NAN if byzantine_value is None
+                           else float(byzantine_value))))
         crashed_until = np.zeros(n_agents, np.int64)   # rounds < this: dead
         for r in range(n_rounds):
             for a in range(n_agents):
@@ -255,7 +403,12 @@ class FaultRecord:
         self.errors.append((int(agent), int(round), repr(err)))
 
     def note_corrupt_row(self, round: int, row: np.ndarray) -> None:
-        self.corrupt_rows[int(round)] = [float(v) for v in row]
+        row = np.asarray(row)
+        if row.ndim == 2:      # byzantine (N, 2) [mult, add] pairs
+            self.corrupt_rows[int(round)] = [
+                [float(m), float(ad)] for m, ad in row]
+        else:
+            self.corrupt_rows[int(round)] = [float(v) for v in row]
 
     # -- replay queries --------------------------------------------------
     @property
@@ -277,7 +430,23 @@ class FaultRecord:
     def live_row(self, round: int) -> Optional[np.ndarray]:
         """The (N,) live row the broker passed for ``round`` -- None
         before the first eviction (the broker passes None until then, so
-        replay must too to retrace the exact same jitted graph)."""
+        replay must too to retrace the exact same jitted graph).
+
+        Replay queries this once per round; the naive form rescans the
+        whole event list each time, so the rows are computed once as
+        per-event snapshots (lazily, rebuilt whenever events grew) and
+        answered by binary search -- regression-tested against
+        :meth:`_live_row_scan`."""
+        rounds, snaps, first = self._live_index()
+        if first is None or round < first:
+            return None
+        if rounds is None:            # out-of-order events: exact scan
+            return self._live_row_scan(round)
+        idx = bisect.bisect_right(rounds, round)
+        return snaps[idx - 1].copy() if idx else None
+
+    def _live_row_scan(self, round: int) -> Optional[np.ndarray]:
+        """The pre-index linear scan (regression oracle)."""
         first = self.first_eviction_round()
         if first is None or round < first:
             return None
@@ -286,6 +455,32 @@ class FaultRecord:
             if r <= round:
                 row[a] = 0.0 if kind == "evict" else 1.0
         return row
+
+    def _live_index(self):
+        """Lazy ``(event rounds, cumulative row snapshots, first evict
+        round)``, keyed on ``len(events)`` (the record only appends).
+        ``rounds`` comes back None when events arrived out of round
+        order (hand-built records) -- callers then fall back to the
+        scan, which applies events in LIST order like the original."""
+        cached = getattr(self, "_live_cache", None)
+        if cached is not None and cached[0] == len(self.events):
+            return cached[1], cached[2], cached[3]
+        first = self.first_eviction_round()
+        rounds: Optional[List[int]] = []
+        snaps: List[np.ndarray] = []
+        row = np.ones(self.n_agents, np.float32)
+        prev = None
+        for (r, a, kind) in self.events:
+            if prev is not None and r < prev:
+                rounds, snaps = None, []
+                break
+            prev = r
+            row = row.copy()
+            row[a] = 0.0 if kind == "evict" else 1.0
+            rounds.append(r)
+            snaps.append(row)
+        self._live_cache = (len(self.events), rounds, snaps, first)
+        return rounds, snaps, first
 
     def live_matrix(self, n_rounds: int) -> np.ndarray:
         """(n_rounds, N) 0/1 liveness, for schedule validation."""
@@ -316,7 +511,13 @@ class FaultRecord:
         rec.retries = [(int(a), int(r), int(n)) for a, r, n in d["retries"]]
         rec.drops = [(int(a), int(r)) for a, r in d["drops"]]
         rec.errors = [(int(a), int(r), str(m)) for a, r, m in d["errors"]]
-        rec.corrupt_rows = {int(r): [float(v) for v in row]
+
+        def parse_row(row):
+            if row and isinstance(row[0], (list, tuple)):
+                return [[float(m), float(ad)] for m, ad in row]
+            return [float(v) for v in row]
+
+        rec.corrupt_rows = {int(r): parse_row(row)
                             for r, row in d["corrupt_rows"].items()}
         return rec
 

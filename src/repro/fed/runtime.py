@@ -95,6 +95,8 @@ class FedConfig:
     max_staleness: int = 0           # K: forced arrival bound
     guard_increments: bool = False   # in-jit finite/norm screen on uplinks
     guard_norm_bound: float = float("inf")  # inf = finiteness-only screen
+    aggregator: str = "mean"         # repro.fed.robust registry name
+    aggregator_param: float = 0.0    # trim count f / clip radius
 
     def to_spec(self) -> FedSpec:
         from repro.fed.api import CompressionSpec, PrivacySpec
@@ -116,7 +118,9 @@ class FedConfig:
             async_mode=self.async_mode,
             max_staleness=self.max_staleness,
             guard_increments=self.guard_increments,
-            guard_norm_bound=self.guard_norm_bound)
+            guard_norm_bound=self.guard_norm_bound,
+            aggregator=self.aggregator,
+            aggregator_param=self.aggregator_param)
 
 
 def packed_layout(model: Model, fcfg):

@@ -1,0 +1,183 @@
+"""Column-wise sort-and-trim kernels for Byzantine-robust aggregation.
+
+One kernel over the agent-stacked ``(N, M)`` buffer: per COLUMN (model
+coordinate), sort the N agent values and reduce an order statistic --
+``trimmed_mean`` (drop the ``f`` smallest and ``f`` largest, average
+the rest) or ``coord_median``.  The robust coordinator step consumes
+the ``(1, M)`` result in place of the plain agent mean
+(:mod:`repro.fed.robust`).
+
+The sort is the compress suite's machinery turned sideways: the block
+is transposed in-kernel to ``(block_cols, N)`` so the agent axis is the
+LAST axis, then sorted per row either by one in-kernel ``lax.sort``
+(``sort_impl="xla"``, the interpret/CPU branch) or by the compress
+suite's compare-exchange bitonic network (``sort_impl="bitonic"``, the
+Mosaic/TPU branch -- no gather/scatter anywhere).  Both branches feed
+the IDENTICAL post-sort arithmetic, so every realization produces the
+bit-identical aggregate (asserted in ``tests/test_robust.py``).
+
+Sort keys are int32 IEEE total-order keys (an involution of the f32
+bit pattern), never raw floats: the order is total (NaN included, -0.0
+before +0.0) and the sorted VALUES are recovered exactly by applying
+the same involution to the sorted keys -- no carried permutation, no
+stability requirement.
+
+Liveness composes inside the order statistics, not by premultiplying:
+an evicted agent's row gets the composite key ``(dead=1, *)`` and
+sorts after every live row, so trim positions and the median index are
+taken against ``n_live``, exactly the survivor-mean semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.compress.kernel import (_I32_MAX, _bitonic_sort,
+                                           _pad_cols, _pow2_pad)
+
+BLOCK_COLS = 256   # columns per grid program (each sorts N values)
+
+ROBUST_STATS = ("trimmed_mean", "coord_median")
+
+_SIGN_MASK = np.int32(0x7FFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# IEEE total-order keys (involution: _order_key inverts itself)
+# ---------------------------------------------------------------------------
+
+def _order_key(x):
+    """int32 key whose signed order is the IEEE total order of ``x``
+    (f32): flip the low 31 bits of negative floats.  The map is an
+    involution on the sign-preserved int32, so the sorted keys invert
+    back to the sorted values exactly (:func:`_order_val`)."""
+    b = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return b ^ ((b >> 31) & _SIGN_MASK)
+
+
+def _order_val(key):
+    """Exact inverse of :func:`_order_key` (same involution)."""
+    b = key ^ ((key >> 31) & _SIGN_MASK)
+    return jax.lax.bitcast_convert_type(b, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Shared post-sort arithmetic (the parity surface: ref.py mirrors this
+# op-for-op, so kernel-vs-ref bitwise parity reduces to equal sorts)
+# ---------------------------------------------------------------------------
+
+def _pairwise_sum(v):
+    """Balanced pairwise sum along the last axis -> ``(rows, 1)``.
+
+    The reduction tree is explicit (static halving of a zero-padded
+    power-of-two axis), so every backend and realization produces the
+    bit-identical f32 sum -- ``jnp.sum``'s association is
+    backend-dependent, which would break the kernel-vs-ref bitwise
+    parity contract."""
+    n = v.shape[-1]
+    pow2 = 1 << max(0, (n - 1).bit_length())
+    if pow2 != n:
+        v = jnp.concatenate(
+            [v, jnp.zeros(v.shape[:-1] + (pow2 - n,), v.dtype)],
+            axis=-1)
+    while v.shape[-1] > 1:
+        k = v.shape[-1] // 2
+        v = v[..., :k] + v[..., k:]
+    return v
+
+
+def _post_sort(val_s, pos, n_live, *, stat, trim):
+    """Order-statistic reduction of per-row ascending values.
+
+    ``val_s``/``pos`` are ``(rows, n)`` (values ascending, dead rows
+    last); ``n_live`` is a ``(1, 1)`` int32.  Returns ``(rows, 1)``.
+    Selection is by masked sum over positions -- no gather, the
+    Mosaic-lowerable form (and exact: exactly one position matches).
+    """
+    if stat == "trimmed_mean":
+        keep = (pos >= trim) & (pos < n_live - trim)
+        denom = jnp.maximum(n_live - 2 * trim, 1).astype(val_s.dtype)
+        # multiply by the explicit reciprocal instead of dividing: XLA
+        # rewrites division BY A CONSTANT into this exact form, so a
+        # literal division would round differently between a traced
+        # live row (kernel operand) and a folded all-ones one (ref)
+        return _pairwise_sum(jnp.where(keep, val_s, 0.0)) * (1.0 / denom)
+    if stat == "coord_median":
+        lo = (n_live - 1) // 2
+        hi = n_live // 2
+        v_lo = _pairwise_sum(jnp.where(pos == lo, val_s, 0.0))
+        v_hi = _pairwise_sum(jnp.where(pos == hi, val_s, 0.0))
+        # exact when n_live is odd: 0.5 * (v + v) == v in f32
+        return 0.5 * (v_lo + v_hi)
+    raise ValueError(f"unknown robust stat {stat!r} "
+                     f"(known: {', '.join(ROBUST_STATS)})")
+
+
+def _sorted_block(xt, dead, sort_impl):
+    """Sort each row of ``(rows, n)`` by ``(dead, total-order key)``
+    ascending; returns the values in sorted order (dead last)."""
+    key = _order_key(xt)
+    if sort_impl == "xla":
+        _, key_s = jax.lax.sort((dead, key), dimension=xt.ndim - 1,
+                                num_keys=2, is_stable=False)
+    elif sort_impl == "bitonic":
+        n = xt.shape[-1]
+        _, pad = _pow2_pad(n)
+        dead_s, key_s = _bitonic_sort((_pad_cols(dead, pad, _I32_MAX),
+                                       _pad_cols(key, pad, 0)))
+        key_s = key_s[:, :n]
+    else:
+        raise ValueError(f"unknown sort_impl {sort_impl!r} "
+                         f"(known: 'xla', 'bitonic')")
+    return _order_val(key_s)
+
+
+# ---------------------------------------------------------------------------
+# Kernel body + pallas_call wrapper
+# ---------------------------------------------------------------------------
+
+def _sort_agg_kernel(x_ref, live_ref, out_ref, *, stat, trim, sort_impl):
+    x = x_ref[...]                       # (N, block_cols)
+    lv = live_ref[...]                   # (1, N) float 0/1
+    xt = x.T                             # (block_cols, N)
+    dead = jnp.broadcast_to((lv == 0.0).astype(jnp.int32), xt.shape)
+    val_s = _sorted_block(xt, dead, sort_impl)
+    n_live = jnp.sum(lv.astype(jnp.int32), axis=-1, keepdims=True)
+    pos = jax.lax.broadcasted_iota(jnp.int32, xt.shape, 1)
+    out = _post_sort(val_s, pos, n_live, stat=stat, trim=trim)
+    out_ref[...] = out.T.astype(out_ref.dtype)
+
+
+def sort_aggregate_2d(x, live, *, stat, trim=0, sort_impl,
+                      block_cols=BLOCK_COLS, interpret=True):
+    """Robust column aggregate of an ``(N, M)`` buffer -> ``(1, M)``.
+
+    ``live`` is a ``(1, N)`` 0/1 float row (all-ones = no evictions);
+    ``M`` must be a multiple of ``block_cols`` (ops.py pads).
+    """
+    if stat not in ROBUST_STATS:
+        raise ValueError(f"unknown robust stat {stat!r} "
+                         f"(known: {', '.join(ROBUST_STATS)})")
+    n, width = x.shape
+    bc = min(block_cols, width)
+    if width % bc:
+        raise ValueError(f"column count {width} not a multiple of the "
+                         f"column block {bc} (ops.py pads)")
+    if live.shape != (1, n):
+        raise ValueError(f"live row must be (1, {n}), got {live.shape}")
+    kernel = functools.partial(_sort_agg_kernel, stat=stat,
+                               trim=int(trim), sort_impl=sort_impl)
+    return pl.pallas_call(
+        kernel,
+        grid=(width // bc,),
+        in_specs=[pl.BlockSpec((n, bc), lambda i: (0, i)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, bc), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, width), x.dtype),
+        interpret=interpret,
+    )(x, jnp.asarray(live))

@@ -1,0 +1,65 @@
+"""Public robust-aggregation ops.
+
+Jitted wrappers over the :mod:`repro.kernels.robust_agg.kernel` Pallas
+kernel: pad the column axis to the block, dispatch the column-blocked
+grid, slice back.  ``interpret`` resolves via
+:data:`repro.kernels.ON_TPU` like the other kernel suites;
+``sort_impl`` defaults to the in-kernel ``lax.sort`` when interpreting
+(this CPU container) and to the bitonic network on TPU, where
+``lax.sort`` has no Mosaic lowering -- both produce the bit-identical
+aggregate (asserted in ``tests/test_robust.py``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ON_TPU
+from repro.kernels.robust_agg.kernel import BLOCK_COLS, sort_aggregate_2d
+
+
+def _resolve(x, interpret, sort_impl):
+    if x.ndim != 2:
+        raise ValueError(f"robust aggregates take (N, M) buffers, got "
+                         f"shape {x.shape}")
+    if x.dtype == jnp.float64:
+        raise ValueError("float64 buffers are not supported (the sort "
+                         "key is the float32 total-order bit pattern)")
+    if interpret is None:
+        interpret = not ON_TPU
+    if sort_impl is None:
+        sort_impl = "xla" if interpret else "bitonic"
+    return interpret, sort_impl
+
+
+@partial(jax.jit, static_argnames=("stat", "trim", "interpret",
+                                   "sort_impl", "block_cols"))
+def robust_aggregate(x, live=None, *, stat, trim=0, interpret=None,
+                     sort_impl=None, block_cols=BLOCK_COLS):
+    """Robust column aggregate of ``(N, M)`` -> ``(1, M)``.
+
+    ``stat="trimmed_mean"`` drops the ``trim`` smallest and largest
+    live values per column and averages the rest;
+    ``stat="coord_median"`` takes the per-column median of the live
+    values.  ``live`` is an optional ``(N,)`` (or ``(1, N)``) 0/1 row;
+    dead agents are excluded from the order statistics entirely
+    (survivor semantics, matching the engine's live masks).
+    """
+    interpret, sort_impl = _resolve(x, interpret, sort_impl)
+    n, width = x.shape
+    if live is None:
+        lv = jnp.ones((1, n), jnp.float32)
+    else:
+        lv = jnp.asarray(live, jnp.float32).reshape(1, n)
+    bc = min(block_cols, width)
+    pad = -width % bc
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((n, pad), x.dtype)], axis=1)
+    out = sort_aggregate_2d(x, lv, stat=stat, trim=trim,
+                            sort_impl=sort_impl, block_cols=bc,
+                            interpret=interpret)
+    return out[:, :width]

@@ -1,0 +1,49 @@
+"""Reference oracle for the robust-aggregation kernels.
+
+Plain-XLA order-statistic aggregates over an agent-stacked ``(N, M)``
+buffer, arithmetic mirroring :mod:`repro.kernels.robust_agg.kernel`
+op-for-op (transpose so the agent axis is last, one ``lax.sort`` of
+``(dead, total-order key)``, the same masked-sum selection): the
+kernel is asserted BITWISE against this oracle in
+``tests/test_robust.py``.  This is also the aggregate the ``xla``
+engine backend ships (:mod:`repro.fed.robust` registry entries).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.robust_agg.kernel import (ROBUST_STATS, _order_key,
+                                             _order_val, _post_sort)
+
+
+def robust_aggregate_ref(x, live=None, *, stat, trim=0):
+    """Robust column aggregate of ``(N, M)`` -> ``(1, M)``.
+
+    ``stat`` is ``"trimmed_mean"`` (drop the ``trim`` smallest and
+    largest live values per column, average the rest) or
+    ``"coord_median"``.  ``live`` is an optional ``(N,)`` 0/1 row:
+    dead agents sort after every live value and the trim window /
+    median index are taken against ``n_live`` (survivor semantics).
+    """
+    if stat not in ROBUST_STATS:
+        raise ValueError(f"unknown robust stat {stat!r} "
+                         f"(known: {', '.join(ROBUST_STATS)})")
+    if x.ndim != 2:
+        raise ValueError(f"robust aggregates take (N, M) buffers, got "
+                         f"shape {x.shape}")
+    n = x.shape[0]
+    if live is None:
+        lv = jnp.ones((1, n), jnp.float32)
+    else:
+        lv = jnp.asarray(live, jnp.float32).reshape(1, n)
+    xt = x.T                                        # (M, N)
+    dead = jnp.broadcast_to((lv == 0.0).astype(jnp.int32), xt.shape)
+    _, key_s = jax.lax.sort((dead, _order_key(xt)), dimension=1,
+                            num_keys=2, is_stable=False)
+    val_s = _order_val(key_s)
+    n_live = jnp.sum(lv.astype(jnp.int32), axis=-1, keepdims=True)
+    pos = jax.lax.broadcasted_iota(jnp.int32, xt.shape, 1)
+    out = _post_sort(val_s, pos, n_live, stat=stat, trim=int(trim))
+    return out.T.astype(x.dtype)                    # (1, M)

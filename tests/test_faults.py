@@ -136,6 +136,143 @@ def test_fault_plan_generate_deterministic():
                        for o in a.events)
 
 
+# the satellite acceptance matrix: every byzantine JSON shape that must
+# load, and every malformed one that must be rejected with the same
+# error a directly-constructed event raises
+_BYZ_JSON_ACCEPT = [
+    # (payload, probe(event) -> bool)
+    ({"kind": "sign_flip", "agent": 0, "round": 2},
+     lambda e: e.byzantine_pair() == (-1.0, 0.0) and e.until is None),
+    ({"kind": "sign_flip", "agent": 1, "round": 0, "until": 5},
+     lambda e: e.active_at(4) and not e.active_at(5)),
+    ({"kind": "scale", "agent": 2, "round": 1, "value": -5.0},
+     lambda e: e.byzantine_pair() == (-5.0, 0.0)),
+    ({"kind": "scale", "agent": 0, "round": 0, "value": 0.25,
+      "until": 3},
+     lambda e: e.byzantine_pair() == (0.25, 0.0)),
+    ({"kind": "drift", "agent": 3, "round": 7, "value": 0.1},
+     lambda e: e.byzantine_pair() == (1.0, 0.1)),
+]
+
+_BYZ_JSON_REJECT = [
+    # (payload, error-pattern)
+    ({"kind": "sign_flip", "agent": 0, "round": 0, "value": 2.0},
+     "takes no value"),
+    ({"kind": "scale", "agent": 0, "round": 0}, "finite nonzero"),
+    ({"kind": "scale", "agent": 0, "round": 0, "value": 0.0},
+     "finite nonzero"),
+    ({"kind": "drift", "agent": 0, "round": 0,
+      "value": float("inf")}, "finite value"),
+    ({"kind": "sign_flip", "agent": 0, "round": 0, "delay": 0.5},
+     "carry no delay"),
+]
+
+
+@pytest.mark.parametrize("payload,probe", _BYZ_JSON_ACCEPT)
+def test_byzantine_json_accepts(payload, probe):
+    e = FaultEvent.from_json(payload)
+    assert e.byzantine
+    assert probe(e)
+    # the round trip is exact: dumping re-yields the canonical payload
+    assert FaultEvent.from_json(e.to_json()) == e
+    assert json.loads(json.dumps(e.to_json())) == e.to_json()
+
+
+@pytest.mark.parametrize("payload,pattern", _BYZ_JSON_REJECT)
+def test_byzantine_json_rejects(payload, pattern):
+    with pytest.raises(ValueError, match=pattern):
+        FaultEvent.from_json(payload)
+
+
+def test_byzantine_plan_json_roundtrip_and_generate():
+    plan = FaultPlan.generate(21, n_agents=8, n_rounds=10,
+                              n_byzantine=3, byzantine_kind="scale",
+                              byzantine_value=-2.0, byzantine_start=2)
+    again = FaultPlan.generate(21, n_agents=8, n_rounds=10,
+                               n_byzantine=3, byzantine_kind="scale",
+                               byzantine_value=-2.0, byzantine_start=2)
+    assert plan.events == again.events and plan.has_byzantine
+    byz = [e for e in plan.events if e.byzantine]
+    assert len(byz) == 3
+    assert len({e.agent for e in byz}) == 3
+    assert all(e.round == 2 and e.until is None for e in byz)
+    loaded = FaultPlan.from_json(plan.to_json())
+    assert loaded.events == plan.events
+    with pytest.raises(ValueError, match="unknown byzantine kind"):
+        FaultPlan.generate(0, n_agents=4, n_rounds=2, n_byzantine=1,
+                           byzantine_kind="gaussian")
+    with pytest.raises(ValueError, match="needs a byzantine_value"):
+        FaultPlan.generate(0, n_agents=4, n_rounds=2, n_byzantine=1,
+                           byzantine_kind="scale")
+    with pytest.raises(ValueError, match="n_byzantine"):
+        FaultPlan.generate(0, n_agents=2, n_rounds=2, n_byzantine=3)
+
+
+def test_fault_plan_indexes_match_scan():
+    """Satellite 1: corrupt_value / byzantine_at answer from the
+    (agent, round) indexes built at construction; the pre-index linear
+    scans are kept as the regression oracle."""
+    rng = np.random.default_rng(4)
+    events = []
+    for _ in range(60):
+        kind = rng.choice(["corrupt", "sign_flip", "scale", "drift"])
+        agent, rnd = int(rng.integers(6)), int(rng.integers(12))
+        until = None if rng.random() < 0.5 else rnd + int(
+            rng.integers(1, 4))
+        if kind == "corrupt":
+            events.append(FaultEvent("corrupt", agent, rnd, until=until,
+                                     value=float(rng.normal())))
+        elif kind == "sign_flip":
+            events.append(FaultEvent("sign_flip", agent, rnd,
+                                     until=until))
+        elif kind == "scale":
+            events.append(FaultEvent("scale", agent, rnd, until=until,
+                                     value=float(rng.normal()) or 1.0))
+        else:
+            events.append(FaultEvent("drift", agent, rnd, until=until,
+                                     value=float(rng.normal())))
+    plan = FaultPlan(tuple(events))
+    for agent in range(6):
+        for rnd in range(14):
+            assert plan.corrupt_value(agent, rnd) == \
+                plan._corrupt_value_scan(agent, rnd)
+            assert plan.byzantine_at(agent, rnd) == \
+                plan._byzantine_at_scan(agent, rnd)
+
+
+def test_fault_record_live_index_matches_scan():
+    """Satellite 1 (record side): live_row binary-searches cumulative
+    snapshots; the linear scan stays as the oracle, including the
+    out-of-round-order fallback."""
+    rec = FaultRecord(n_agents=5)
+    rec.note_eviction(1, 2)
+    rec.note_eviction(3, 4)
+    rec.note_rejoin(1, 6)
+    rec.note_eviction(0, 9)
+    for r in range(12):
+        got = rec.live_row(r)
+        want = rec._live_row_scan(r)
+        if want is None:
+            assert got is None
+        else:
+            np.testing.assert_array_equal(got, want)
+    # a mutated record invalidates and rebuilds the cache
+    rec.note_eviction(4, 10)
+    np.testing.assert_array_equal(rec.live_row(11),
+                                  rec._live_row_scan(11))
+    # out-of-round-order events: the index detects it and falls back
+    rec2 = FaultRecord(n_agents=3)
+    rec2.note_eviction(0, 5)
+    rec2.note_eviction(1, 2)           # earlier round appended later
+    for r in range(8):
+        got = rec2.live_row(r)
+        want = rec2._live_row_scan(r)
+        if want is None:
+            assert got is None
+        else:
+            np.testing.assert_array_equal(got, want)
+
+
 def test_fault_record_live_rows_and_json(tmp_path):
     rec = FaultRecord(n_agents=3)
     assert not rec.has_faults and rec.live_row(5) is None
